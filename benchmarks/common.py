@@ -1,0 +1,41 @@
+"""Shared helpers for the paper-experiment benchmarks (§5 / App. A)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (TimingModel, build_schedule, replay, make_scheduler,
+                        heterogeneous_speeds)
+from repro.objectives import LogRegProblem
+
+# the paper's stepsize grid (App. A.1)
+PAPER_GRID = (0.005, 0.004, 0.003, 0.002, 0.001, 0.0005, 0.0001)
+
+ALGS = ("pure", "random", "shuffled")
+
+
+def run_alg(prob: LogRegProblem, alg: str, pattern: str, T: int,
+            stepsizes=PAPER_GRID, stochastic: bool = False, seed: int = 0,
+            slow_factor: float = 8.0, log_every: int = 100):
+    """Grid-search the stepsize (paper protocol: best final grad norm with
+    small fluctuations) and return (best_gamma, ts, grad_norms, seconds)."""
+    n = prob.n
+    best = None
+    t0 = time.time()
+    for gamma in stepsizes:
+        sched = make_scheduler(alg, n, seed=seed)
+        tm = TimingModel(heterogeneous_speeds(n, slow_factor), pattern,
+                         seed=seed)
+        s = build_schedule(sched, tm, T)
+        res = replay(s, prob.grad_fn(stochastic=stochastic),
+                     jnp.zeros(prob.d), gamma, log_every=log_every,
+                     full_grad_fn=prob.full_grad)
+        tail = float(np.mean(res.grad_norms[-3:]))
+        fluct = float(np.std(res.grad_norms[-5:]))
+        score = tail + 0.5 * fluct
+        if best is None or score < best[0]:
+            best = (score, gamma, res.log_ts, res.grad_norms)
+    _, gamma, ts, gns = best
+    return gamma, ts, gns, time.time() - t0

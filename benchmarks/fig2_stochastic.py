@@ -1,0 +1,41 @@
+"""Figure 2: stochastic gradients on Syn(α, β), poisson delays, batch m/10.
+
+Claim validated: same ordering as Fig. 1 under gradient noise; shuffled
+finds the lowest-error stationary point across heterogeneity levels.
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import numpy as np
+
+from repro.objectives import LogRegProblem, make_synthetic
+from .common import run_alg, ALGS
+
+
+def run(T: int = 3000, out: str = "experiments/figs", quick: bool = False):
+    os.makedirs(out, exist_ok=True)
+    levels = ((0.5, 0.5), (1.0, 1.0), (1.5, 1.5)) if not quick else ((1.0, 1.0),)
+    rows = []
+    for (a, b_) in levels:
+        A, b = make_synthetic(a, b_, n=10, m=200, d=300, seed=0)
+        prob = LogRegProblem(A, b, lam=0.1, batch_size=20)   # m/10
+        for alg in ALGS:
+            gamma, ts, gns, secs = run_alg(prob, alg, "poisson", T,
+                                           stochastic=True)
+            rows.append({"alpha": a, "beta": b_, "alg": alg, "gamma": gamma,
+                         "final_grad_norm": float(np.min(gns[-3:])),
+                         "seconds": round(secs, 1)})
+            np.savez(os.path.join(out, f"fig2_syn{a}_{b_}_{alg}.npz"),
+                     ts=ts, grad_norms=gns, gamma=gamma)
+    with open(os.path.join(out, "fig2.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=sorted({k for r in rows for k in r}))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,62 @@
+"""Micro-benchmark: AsyncTrainer train_step / serve_step wall time on the
+reduced configs (CPU; TPU perf comes from §Roofline, not wall clock)."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import ARCHS, get_arch
+from repro.data import DataConfig, HeterogeneousTokenPipeline
+from repro.distributed import AsyncTrainer, AsyncConfig
+from repro.optim import OptConfig
+
+
+def run(out: str = "experiments/figs", quick: bool = False):
+    os.makedirs(out, exist_ok=True)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    rows = []
+    names = ["qwen2-0.5b", "deepseek-moe-16b", "mamba2-370m"] if quick \
+        else sorted(ARCHS)
+    for name in names:
+        cfg = get_arch(name).reduced().with_(remat="none")
+        tr = AsyncTrainer(cfg, mesh, opt=OptConfig(lr=1e-3),
+                          async_cfg=AsyncConfig(delay_rounds=1))
+        state = tr.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(tr.train_step_fn())
+        B, S = 2, 32
+        pipe = HeterogeneousTokenPipeline(DataConfig(cfg.vocab, S, B))
+        from repro.models import batch_specs
+        batch = {}
+        for k, sp in batch_specs(cfg, B, S).items():
+            if sp.dtype == "int32":
+                batch[k] = jnp.asarray(pipe.batch(0)["tokens"][:, :sp.shape[1]])
+            else:   # stubbed modality embeddings (vlm patches / audio frames)
+                batch[k] = jax.random.normal(jax.random.PRNGKey(1), sp.shape,
+                                             jnp.float32)
+        mask = jnp.ones((tr.n_groups,))
+        state, m = step(state, batch, mask)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        iters = 5
+        for i in range(iters):
+            state, m = step(state, batch, mask)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / iters * 1e6
+        rows.append({"name": f"train_step_{name}", "us_per_call": round(us, 1),
+                     "derived": f"loss={float(m['loss']):.3f}"})
+    with open(os.path.join(out, "perf.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["name", "us_per_call", "derived"])
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,81 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention;
+full curves/tables land in experiments/figs/*.csv|npz.
+
+  python -m benchmarks.run [--quick] [--only fig1,fig2,fig3,table1,perf]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grids (CI-sized)")
+    ap.add_argument("--only", default="fig1,fig2,fig3,table1,ablations,perf")
+    args = ap.parse_args()
+    which = set(args.only.split(","))
+
+    print("name,us_per_call,derived")
+
+    if "fig1" in which:
+        from . import fig1_fullgrad
+        t0 = time.time()
+        rows = fig1_fullgrad.run(quick=args.quick)
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        worst = max(r["final_grad_norm"] for r in rows if r["alg"] == "pure")
+        best = min(r["final_grad_norm"] for r in rows if r["alg"] == "shuffled")
+        print(f"fig1_fullgrad,{us:.0f},pure_worst={worst:.3g};shuffled_best={best:.3g}")
+
+    if "fig2" in which:
+        from . import fig2_stochastic
+        t0 = time.time()
+        rows = fig2_stochastic.run(quick=args.quick)
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        best = min(r["final_grad_norm"] for r in rows if r["alg"] == "shuffled")
+        print(f"fig2_stochastic,{us:.0f},shuffled_best={best:.3g}")
+
+    if "fig3" in which:
+        from . import fig3_grid
+        t0 = time.time()
+        rows = fig3_grid.run(quick=args.quick)
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        n_shuffled_wins = sum(
+            1 for r in rows if r["alg"] == "shuffled" and all(
+                r["final_grad_norm"] <= q["final_grad_norm"] * 1.2
+                for q in rows
+                if q["alg"] != "shuffled" and q["pattern"] == r["pattern"]
+                and q["alpha"] == r["alpha"]))
+        print(f"fig3_grid,{us:.0f},shuffled_wins={n_shuffled_wins}")
+
+    if "table1" in which:
+        from . import table1_rates
+        t0 = time.time()
+        rows = table1_rates.run(quick=args.quick)
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        ok = all(r["sigma2_ok"] and r["nu2_ok"] for r in rows)
+        print(f"table1_rates,{us:.0f},bounds_hold={ok}")
+
+    if "ablations" in which:
+        from . import ablations
+        t0 = time.time()
+        rows = ablations.run(quick=args.quick)
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        wb = {r["b"]: r["final_grad_norm"] for r in rows
+              if r["ablation"] == "waiting_b"}
+        mono = all(wb[b2] <= wb[b1] * 1.3 for b1, b2 in
+                   zip(sorted(wb), sorted(wb)[1:]))
+        print(f"ablations,{us:.0f},waiting_b_monotone={mono}")
+
+    if "perf" in which:
+        from . import perf_trainstep
+        rows = perf_trainstep.run(quick=args.quick)
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

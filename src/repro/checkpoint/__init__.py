@@ -1,0 +1,3 @@
+from .checkpointer import save, restore, load_meta
+
+__all__ = ["save", "restore", "load_meta"]

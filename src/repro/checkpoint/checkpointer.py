@@ -1,0 +1,69 @@
+"""Host-gather checkpointing: sharded state → flat .npz + metadata.
+
+Small-scale by design (the container is one host); at real pod scale this
+would be per-shard async writes — the interface (save/restore of the full
+train-state pytree keyed by flattened paths) is what the rest of the
+framework depends on.  bfloat16 leaves are bit-cast to uint16 for storage
+(npz has no native bf16).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+_BF16 = "__bf16__"
+
+
+def _flatten(tree):
+    out = {}
+    for p, v in jax.tree_util.tree_leaves_with_path(tree):
+        arr = np.asarray(jax.device_get(v))
+        key = jax.tree_util.keystr(p)
+        if arr.dtype.name == "bfloat16":
+            out[_BF16 + key] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def save(path: str, state, step: int | None = None, meta: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+    np.savez(os.path.join(path, "state.npz"), **flat)
+    info = {"step": int(step) if step is not None else None,
+            "keys": sorted(flat), **(meta or {})}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(info, f, indent=1)
+
+
+def restore(path: str, like_state, shardings=None):
+    """Restore into the structure of ``like_state`` (shapes must match)."""
+    import ml_dtypes
+
+    data = np.load(os.path.join(path, "state.npz"))
+    leaves_paths = jax.tree_util.tree_leaves_with_path(like_state)
+    sh_leaves = (jax.tree_util.tree_leaves(shardings)
+                 if shardings is not None else [None] * len(leaves_paths))
+    new_leaves = []
+    for (p, old), sh in zip(leaves_paths, sh_leaves):
+        key = jax.tree_util.keystr(p)
+        if _BF16 + key in data.files:
+            arr = data[_BF16 + key].view(ml_dtypes.bfloat16)
+        else:
+            arr = data[key]
+        if tuple(arr.shape) != tuple(old.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {old.shape}")
+        if arr.dtype != old.dtype:
+            arr = arr.astype(old.dtype)
+        new_leaves.append(jax.device_put(arr, sh) if sh is not None else
+                          jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(like_state)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)

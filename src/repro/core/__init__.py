@@ -1,0 +1,32 @@
+"""AsGrad core: the paper's algorithmic framework (Algorithm 1).
+
+Schedule-first architecture: a discrete-event engine realises the job
+ordering (i_t, π_t); an exact jittable replay executes the updates; the same
+schedulers drive the distributed trainer's round masks.
+"""
+from .delays import TimingModel, PATTERNS, heterogeneous_speeds
+from .schedulers import (
+    Scheduler,
+    PureAsync,
+    PureAsyncWaiting,
+    RandomAsync,
+    RandomAsyncWaiting,
+    ShuffledAsync,
+    MiniBatch,
+    RandomReshuffling,
+    make_scheduler,
+    REGISTRY,
+)
+from .engine import Schedule, build_schedule, round_masks
+from .simulator import replay, run_async_sgd, delay_adaptive_stepsizes, ReplayResult
+from . import theory, trace
+
+__all__ = [
+    "TimingModel", "PATTERNS", "heterogeneous_speeds",
+    "Scheduler", "PureAsync", "PureAsyncWaiting", "RandomAsync",
+    "RandomAsyncWaiting", "ShuffledAsync", "MiniBatch", "RandomReshuffling",
+    "make_scheduler", "REGISTRY",
+    "Schedule", "build_schedule", "round_masks",
+    "replay", "run_async_sgd", "delay_adaptive_stepsizes", "ReplayResult",
+    "theory", "trace",
+]

@@ -1,0 +1,67 @@
+"""Worker timing models — Section 5 / Appendix A of the paper.
+
+Each worker ``i`` owns a positive speed parameter ``s_i``; a timing model
+turns it into a per-job compute time ``r`` (in simulated seconds):
+
+* ``fixed``:    r = s_i                       (fixed delay pattern)
+* ``poisson``:  r ~ Po(s_i)                   (clamped to >= 1)
+* ``normal``:   r = |N(s_i, s_i)| + 1
+* ``uniform``:  r ~ Uni(0, s_i)
+
+These are exactly the four patterns the paper benchmarks.  The simulator is
+agnostic: anything with ``sample(worker) -> float`` works.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PATTERNS = ("fixed", "poisson", "normal", "uniform")
+
+
+class TimingModel:
+    """Samples per-job compute times for ``n`` workers.
+
+    Parameters
+    ----------
+    speeds:
+        array of per-worker parameters ``s_i`` (larger = slower worker).
+    pattern:
+        one of :data:`PATTERNS`.
+    seed:
+        host RNG seed (timings are host-side; they order events, they do not
+        enter any jax computation).
+    """
+
+    def __init__(self, speeds, pattern: str = "fixed", seed: int = 0):
+        speeds = np.asarray(speeds, dtype=np.float64)
+        if np.any(speeds <= 0):
+            raise ValueError("worker speed parameters must be positive")
+        if pattern not in PATTERNS:
+            raise ValueError(f"unknown pattern {pattern!r}; want one of {PATTERNS}")
+        self.speeds = speeds
+        self.pattern = pattern
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.speeds.shape[0])
+
+    def sample(self, worker: int) -> float:
+        s = float(self.speeds[worker])
+        if self.pattern == "fixed":
+            r = s
+        elif self.pattern == "poisson":
+            r = float(self._rng.poisson(s))
+            r = max(r, 1.0)
+        elif self.pattern == "normal":
+            r = abs(float(self._rng.normal(s, np.sqrt(s)))) + 1.0
+        else:  # uniform
+            r = float(self._rng.uniform(0.0, s))
+            r = max(r, 1e-6)
+        return r
+
+
+def heterogeneous_speeds(n: int, slow_factor: float = 5.0, base: float = 1.0):
+    """Linearly spread speeds in [base, base*slow_factor] — a simple
+    heterogeneous-cluster profile used across benchmarks/examples."""
+    return base * (1.0 + (slow_factor - 1.0) * np.arange(n) / max(n - 1, 1))

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, HeterogeneousTokenPipeline, EpochShuffler
+
+__all__ = ["DataConfig", "HeterogeneousTokenPipeline", "EpochShuffler"]

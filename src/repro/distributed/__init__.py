@@ -1,0 +1,9 @@
+from .sharding import (Rules, DEFAULT_RULES, SEQ_PARALLEL_RULES, auto_rules,
+                       logical_pspec, zero_pspec, tree_pspecs, tree_shardings,
+                       bytes_per_device)
+from .async_trainer import AsyncTrainer, AsyncConfig
+from .serve import Server, ServeConfig
+
+__all__ = ["Rules", "DEFAULT_RULES", "SEQ_PARALLEL_RULES", "auto_rules", "logical_pspec", "zero_pspec",
+           "tree_pspecs", "tree_shardings", "bytes_per_device",
+           "AsyncTrainer", "AsyncConfig", "Server", "ServeConfig"]

@@ -1,0 +1,240 @@
+"""AsGrad at pod scale: buffered-asynchronous training (DESIGN.md §3/§4).
+
+Mapping of the paper onto a synchronous SPMD pod:
+
+* the ``n`` workers are the data-parallel groups of the mesh (each group owns
+  a heterogeneous data shard),
+* the assignment rule (pure / random / shuffled / fedbuff) becomes a per-round
+  0/1 *participation mask* over the groups, produced by the same
+  ``repro.core`` schedulers that drive the exact simulator,
+* staleness is the round delay: the gradient applied at round q was computed
+  at round q−1's parameters, held in ONE delayed aggregated-gradient buffer
+  (exactly Alg 3/5 semantics where every in-flight job shares the round
+  boundary point α = ⌊t/b⌋·b) — O(1) extra memory instead of O(τ_C)
+  parameter snapshots,
+* the fused delayed-update (server step, eq. 2) is the Pallas
+  ``async_update`` kernel's target on TPU; here it is the optimizer apply.
+
+``delay_rounds = 0`` recovers synchronous SGD (the paper's baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+from ..models.specs import Spec, abstract_tree, axes_tree
+from ..optim import OptConfig, adam_init, make_optimizer, global_norm
+from .sharding import Rules, DEFAULT_RULES, tree_pspecs, tree_shardings, zero_pspec, logical_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    delay_rounds: int = 1          # 0 = synchronous baseline
+    delay_adaptive: bool = False   # scale lr by 1/(delay+1) ([32]-style)
+    aux_coeff: float = 0.01        # MoE load-balance coefficient
+    microbatches: int = 1          # gradient accumulation (memory lever)
+
+
+class AsyncTrainer:
+    """Composable trainer: (arch config × scheduler) → pjit train_step."""
+
+    def __init__(self, cfg: ArchConfig, mesh: Mesh,
+                 opt: OptConfig = OptConfig(),
+                 async_cfg: AsyncConfig = AsyncConfig(),
+                 rules: Rules = DEFAULT_RULES):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.opt = opt
+        self.async_cfg = async_cfg
+        self.rules = rules
+        self.n_groups = int(np.prod([mesh.shape[a] for a in rules.data_axes
+                                     if a in mesh.axis_names])) or 1
+        self._init_opt, self._update = make_optimizer(opt)
+
+    # ------------------------------------------------------------------ specs
+    def state_specs(self):
+        """State tree as Specs (drives both init and shardings)."""
+        pspecs = M.param_specs(self.cfg)
+
+        def f32_like(s: Spec):
+            return Spec(s.shape, s.axes, "zeros", "float32")
+
+        def grad_like(s: Spec):
+            return Spec(s.shape, s.axes, "zeros", s.dtype)
+
+        specs = {
+            "params": pspecs,
+            "opt": {
+                "m": jax.tree_util.tree_map(f32_like, pspecs,
+                                            is_leaf=lambda x: isinstance(x, Spec)),
+                "v": jax.tree_util.tree_map(f32_like, pspecs,
+                                            is_leaf=lambda x: isinstance(x, Spec)),
+                "count": Spec((), (), "zeros", "int32"),
+            },
+            "step": Spec((), (), "zeros", "int32"),
+        }
+        if self.async_cfg.delay_rounds > 0:
+            specs["gbuf"] = jax.tree_util.tree_map(
+                grad_like, pspecs, is_leaf=lambda x: isinstance(x, Spec))
+        return specs
+
+    def state_shardings(self, fsdp_params: bool = True):
+        """Params/gbuf are 2D-sharded (model × data, FSDP-style) by default:
+        at 314B even bf16 params exceed HBM if only tensor-parallel.  XLA
+        inserts the per-layer all-gathers; their cost shows up in §Roofline
+        and is a §Perf lever."""
+        specs = self.state_specs()
+        out = {
+            "params": tree_shardings(specs["params"], self.mesh, self.rules,
+                                     zero=fsdp_params),
+            "opt": {
+                "m": tree_shardings(specs["opt"]["m"], self.mesh, self.rules, zero=True),
+                "v": tree_shardings(specs["opt"]["v"], self.mesh, self.rules, zero=True),
+                "count": NamedSharding(self.mesh, P()),
+            },
+            "step": NamedSharding(self.mesh, P()),
+        }
+        if "gbuf" in specs:
+            out["gbuf"] = tree_shardings(specs["gbuf"], self.mesh, self.rules,
+                                         zero=fsdp_params)
+        return out
+
+    def abstract_state(self):
+        return abstract_tree(self.state_specs())
+
+    def init_state(self, key):
+        params = M.init_params(self.cfg, key)
+        state = {
+            "params": params,
+            "opt": adam_init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if self.async_cfg.delay_rounds > 0:
+            state["gbuf"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+        return state
+
+    # ------------------------------------------------------------- train step
+    def _grad_shardings(self):
+        pspecs = M.param_specs(self.cfg)
+        return tree_shardings(pspecs, self.mesh, self.rules, zero=True)
+
+    def _example_weights(self, mask, batch_size: int):
+        """mask (n_groups,) → per-example weights (B,): group g owns the
+        contiguous slice [g·B/n, (g+1)·B/n)."""
+        per = batch_size // self.n_groups
+        return jnp.repeat(mask, per, total_repeat_length=batch_size)
+
+    def train_step_fn(self):
+        cfg, acfg = self.cfg, self.async_cfg
+
+        def step(state, batch, mask):
+            bsz = batch["tokens"].shape[0]
+            w = self._example_weights(mask.astype(jnp.float32), bsz)
+
+            def lfn(p, b, wslice):
+                return M.loss_fn(cfg, p, b, example_weights=wslice,
+                                 aux_coeff=acfg.aux_coeff)
+
+            k = acfg.microbatches
+            if k > 1 and bsz % k == 0:
+                # gradient accumulation: scan over k microbatches — peak
+                # activation memory drops ~k×, grads accumulated in f32
+                def split(x):
+                    return x.reshape((k, bsz // k) + x.shape[1:])
+
+                mb = jax.tree_util.tree_map(split, batch)
+                wb = split(w)
+
+                def acc_step(carry, inp):
+                    g_acc, l_acc, a_acc = carry
+                    b_i, w_i = inp
+                    (l, parts_i), g = jax.value_and_grad(
+                        lfn, has_aux=True)(state["params"], b_i, w_i)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(jnp.float32) / k, g_acc, g)
+                    return (g_acc, l_acc + l / k, a_acc + parts_i["aux"] / k), None
+
+                gsh = self._grad_shardings()
+                g0 = jax.tree_util.tree_map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, jnp.float32), s),
+                    state["params"], gsh)
+                (g32, loss, aux), _ = jax.lax.scan(
+                    acc_step, (g0, 0.0, 0.0), (mb, wb))
+                grads = jax.tree_util.tree_map(
+                    lambda g, p: g.astype(p.dtype), g32, state["params"])
+                parts = {"ce": loss, "aux": aux}
+            else:
+                (loss, parts), grads = jax.value_and_grad(
+                    lfn, has_aux=True)(state["params"], batch, w)
+            # ZeRO: reshard grads to the optimizer-state sharding before the
+            # update (reduce-scatter) — clip/Adam f32 temps shrink by the
+            # data-axis factor, which is what makes 314B fit
+            grads = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, grads, self._grad_shardings())
+
+            if acfg.delay_rounds > 0:
+                apply_grads = state["gbuf"]          # stale by one round
+                new_gbuf = grads
+            else:
+                apply_grads = grads
+                new_gbuf = None
+
+            lr_scale = 1.0
+            if acfg.delay_adaptive and acfg.delay_rounds > 0:
+                lr_scale = 1.0 / (1.0 + acfg.delay_rounds)
+
+            # skip the very first round (empty buffer) via a smooth gate
+            gate = jnp.where(
+                (state["step"] == 0) & (acfg.delay_rounds > 0), 0.0, 1.0)
+            new_params, new_opt, gnorm = self._update(
+                apply_grads, state["opt"], state["params"], self.opt,
+                lr_scale=lr_scale * gate)
+
+            new_state = {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+            if new_gbuf is not None:
+                new_state["gbuf"] = new_gbuf
+            metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                       "grad_norm": gnorm,
+                       "participation": jnp.mean(mask.astype(jnp.float32))}
+            return new_state, metrics
+
+        from .sharding import sharded_trace
+        return sharded_trace(step, self.mesh, self.rules)
+
+    def jit_train_step(self, batch_shape, donate: bool = True):
+        """pjit-compiled train step for a (batch, seq) shape."""
+        bspecs = M.batch_specs(self.cfg, *batch_shape)
+        batch_sh = tree_shardings(bspecs, self.mesh, self.rules)
+        state_sh = self.state_shardings()
+        mask_sh = NamedSharding(self.mesh, P())
+        out_metrics_sh = NamedSharding(self.mesh, P())
+        fn = jax.jit(
+            self.train_step_fn(),
+            in_shardings=(state_sh, batch_sh, mask_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,) if donate else (),
+        )
+        return fn
+
+    # ------------------------------------------------------------- input specs
+    def batch_struct(self, batch: int, seq: int):
+        specs = M.batch_specs(self.cfg, batch, seq)
+        sh = tree_shardings(specs, self.mesh, self.rules)
+        ab = abstract_tree(specs)
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            ab, sh)

@@ -1,0 +1,92 @@
+"""Batched serving: prefill-free decode loop over a KV/SSM cache.
+
+``Server`` drives ``models.decode_step`` under pjit with the same logical
+sharding rules as training; batches of requests decode in lock-step (the
+assigned decode shapes are single-step latencies, this loop is the
+end-to-end driver used by examples/serve_batched.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+from ..models.specs import abstract_tree
+from .sharding import Rules, DEFAULT_RULES, tree_shardings
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int
+    ctx_len: int
+    temperature: float = 0.0     # 0 = greedy
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, serve: ServeConfig,
+                 rules: Rules = DEFAULT_RULES):
+        self.cfg, self.mesh, self.serve, self.rules = cfg, mesh, serve, rules
+
+    # ---- shardings -----------------------------------------------------------
+    def cache_shardings(self):
+        specs = M.cache_specs(self.cfg, self.serve.batch, self.serve.ctx_len)
+        return tree_shardings(specs, self.mesh, self.rules)
+
+    def cache_struct(self):
+        specs = M.cache_specs(self.cfg, self.serve.batch, self.serve.ctx_len)
+        ab = abstract_tree(specs)
+        sh = self.cache_shardings()
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), ab, sh)
+
+    def param_shardings(self):
+        return tree_shardings(M.param_specs(self.cfg), self.mesh, self.rules)
+
+    # ---- step ----------------------------------------------------------------
+    def serve_step_fn(self):
+        cfg, ctx = self.cfg, self.serve.ctx_len
+
+        def step(params, cache, tokens, pos):
+            return M.decode_step(cfg, params, cache, tokens, pos, ctx)
+
+        from .sharding import sharded_trace
+        return sharded_trace(step, self.mesh, self.rules)
+
+    def jit_serve_step(self, donate_cache: bool = True):
+        tok_sh = NamedSharding(self.mesh, P(self.rules.data_axes[-1]
+                                            if self.serve.batch > 1 else None))
+        return jax.jit(
+            self.serve_step_fn(),
+            in_shardings=(self.param_shardings(), self.cache_shardings(),
+                          tok_sh, NamedSharding(self.mesh, P())),
+            donate_argnums=(1,) if donate_cache else (),
+        )
+
+    # ---- driver ----------------------------------------------------------------
+    def generate(self, params, prompts: np.ndarray, n_steps: int,
+                 start_pos: int = 0):
+        """prompts: (B,) current last tokens.  Greedy/temperature sampling."""
+        cfg = self.cfg
+        cache = M.init_cache(cfg, self.serve.batch, self.serve.ctx_len)
+        step = jax.jit(lambda p, c, t, q: M.decode_step(
+            cfg, p, c, t, q, self.serve.ctx_len))
+        toks = jnp.asarray(prompts, jnp.int32)
+        key = jax.random.PRNGKey(self.serve.seed)
+        out = []
+        for i in range(n_steps):
+            logits, cache = step(params, cache, toks, jnp.int32(start_pos + i))
+            if self.serve.temperature > 0:
+                key, sub = jax.random.split(key)
+                toks = jax.random.categorical(
+                    sub, logits / self.serve.temperature, axis=-1).astype(jnp.int32)
+            else:
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(toks))
+        return np.stack(out, axis=1)   # (B, n_steps)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def reference_attention(q, k, v, *, causal=True, window=None):
+    """Naive softmax attention.  q: (B,Sq,H,D); k/v: (B,Sk,KV,D)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, D).astype(F32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(F32)) / math.sqrt(D)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(F32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def reference_async_update(params, gbuf, grads, *, lr, clip_scale, delay_scale):
+    """Server update (eq. 2), fused semantics:
+        p'    = p − lr·delay_scale·clip_scale·gbuf   (apply the STALE grad)
+        gbuf' = grads                                (buffer the fresh grad)
+    All flat f32/bf16 arrays of identical shape."""
+    eff = lr * delay_scale * clip_scale
+    p_new = (params.astype(F32) - eff * gbuf.astype(F32)).astype(params.dtype)
+    return p_new, grads
+
+
+def reference_fused_adam(p, m, v, g, *, lr, beta1, beta2, eps, bc1, bc2):
+    """One fused Adam step on flat arrays; moments f32."""
+    g32 = g.astype(F32)
+    m_new = beta1 * m + (1 - beta1) * g32
+    v_new = beta2 * v + (1 - beta2) * g32 * g32
+    step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    p_new = p - (lr * step).astype(p.dtype)
+    return p_new, m_new, v_new
+
+
+def reference_ssd_chunk(x, dt, A, B_, C_):
+    """Single-chunk SSD (sequential recurrence oracle).
+
+    x: (c, H, P); dt: (c, H); A: (H,); B_/C_: (c, N).
+    Returns (y (c,H,P), h_final (H,P,N)) with h0 = 0.
+    """
+    c, H, P = x.shape
+    N = B_.shape[-1]
+    h = jnp.zeros((H, P, N), F32)
+    ys = []
+    for t in range(c):
+        a = jnp.exp(dt[t].astype(F32) * A.astype(F32))          # (H,)
+        upd = jnp.einsum("hp,n->hpn", (x[t] * dt[t][:, None]).astype(F32),
+                         B_[t].astype(F32))
+        h = h * a[:, None, None] + upd
+        ys.append(jnp.einsum("hpn,n->hp", h, C_[t].astype(F32)))
+    return jnp.stack(ys).astype(x.dtype), h

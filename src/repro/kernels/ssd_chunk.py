@@ -1,0 +1,95 @@
+"""Mamba2 SSD intra-chunk Pallas kernel (state-space duality).
+
+The chunked SSD algorithm's hot spot is the intra-chunk quadratic part —
+an attention-like (CBᵀ ∘ L) X contraction plus the chunk-state reduction.
+This kernel fuses, per (batch, chunk, head-block) grid cell:
+
+    L      = exp(segsum(dt·A))      (c, c) lower-triangular decay
+    scores = (C Bᵀ) ∘ L             (c, c)
+    y      = scores @ (x·dt)        (c, P)
+    state  = (B · decay_to_end)ᵀ @ (x·dt)   (N, P)   — chunk-final state
+
+so the (c, c) decay/score matrices never touch HBM.  The inter-chunk scan
+(S/c steps) stays in jnp — it is tiny and sequential.
+
+Grid: (B, n_chunks, H).  Blocks: x (c, P), dt (c,), B/C (c, N) in VMEM;
+c=chunk (default 128) and P, N are MXU-friendly multiples of 64/128.
+
+Validated under interpret=True against ``ref.reference_ssd_chunk``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, *,
+                      chunk):
+    x = x_ref[0, :, 0, :].astype(F32)          # (c, P)
+    dt = dt_ref[0, :, 0].astype(F32)           # (c,)
+    A = a_ref[0]                               # scalar decay rate (this head)
+    Bm = b_ref[0, :, :].astype(F32)            # (c, N)
+    Cm = c_ref[0, :, :].astype(F32)            # (c, N)
+
+    la = dt * A                                # (c,) log-decays
+    cum = jnp.cumsum(la)                       # (c,)
+    # segsum matrix: cum[i] − cum[j] for j ≤ i else −inf
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+
+    xdt = x * dt[:, None]                      # (c, P)
+    scores = (Cm @ Bm.T) * L                   # (c, c)
+    y_ref[0, :, 0, :] = (scores @ xdt).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)      # (c,)
+    st = (Bm * decay_to_end[:, None]).T @ xdt  # (N, P)
+    st_ref[0, 0, :, :] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk_pallas(x, dt, A, B_, C_, *, interpret=False):
+    """Intra-chunk SSD for pre-chunked operands.
+
+    x: (B, nc, c, H, P); dt: (B, nc, c, H); A: (H,);
+    B_/C_: (B, nc, c, N)  (n_groups = 1, head-shared).
+    Returns (y_diag (B,nc,c,H,P), states (B,nc,H,N,P)) — inter-chunk
+    recurrence and offset term are composed by the caller (ops.ssd_chunked).
+    """
+    Bb, nc, c, H, P = x.shape
+    N = B_.shape[-1]
+
+    kern = functools.partial(_ssd_chunk_kernel, chunk=c)
+    grid = (Bb * nc, H)
+    xr = x.reshape(Bb * nc, c, H, P)
+    dtr = dt.reshape(Bb * nc, c, H)
+    br = B_.reshape(Bb * nc, c, N)
+    cr = C_.reshape(Bb * nc, c, N)
+
+    y, st = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, 1, P), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, c, 1), lambda g, h: (g, 0, h)),
+            pl.BlockSpec((1,), lambda g, h: (h,)),
+            pl.BlockSpec((1, c, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, c, N), lambda g, h: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, P), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda g, h: (g, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb * nc, c, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb * nc, H, N, P), F32),
+        ],
+        interpret=interpret,
+    )(xr, dtr, A.astype(F32), br, cr)
+    return (y.reshape(Bb, nc, c, H, P),
+            st.reshape(Bb, nc, H, N, P))

@@ -1,0 +1,4 @@
+from .mesh import make_production_mesh, make_host_mesh, mesh_devices, PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+__all__ = ["make_production_mesh", "make_host_mesh", "mesh_devices",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: 512 placeholder host devices let
+#   jax.make_mesh build the production meshes on this CPU-only container.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this builds the real train/prefill/serve step with the
+production shardings, lowers it with ShapeDtypeStruct stand-ins (no
+allocation), compiles it, and records:
+
+* ``memory_analysis``  — per-device argument/temp/output bytes (proves fit),
+* ``cost_analysis``    — XLA's module-level flops/bytes (loop bodies counted
+  once; kept for reference),
+* ``hlo_cost``         — our while-aware dot-flops / HBM-traffic /
+  collective-bytes model (see hlo_cost.py) — feeds §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--out experiments/dryrun]
+"""
+__doc__ = DOC
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_arch
+from ..configs.base import ArchConfig, InputShape
+from ..distributed import (AsyncTrainer, AsyncConfig, Rules, DEFAULT_RULES,
+                           tree_shardings)
+from ..models import model as M
+from ..models.specs import abstract_tree
+from ..optim import OptConfig
+from . import hlo_cost
+from .mesh import make_production_mesh, mesh_devices
+
+LONG_WINDOW = 8192   # SWA engaged for full-attention archs on long_500k
+
+
+def arch_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """long_500k requires sub-quadratic attention: SSM/hybrid run natively;
+    every other family gets the sliding-window variant (DESIGN.md §5)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return cfg.with_(sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def _with_sharding(tree_specs, mesh, rules, zero=False):
+    ab = abstract_tree(tree_specs)
+    sh = tree_shardings(tree_specs, mesh, rules, zero=zero)
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), ab, sh)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh, rules=DEFAULT_RULES):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, zero
+    allocation) for every model input of this (arch, shape)."""
+    if shape.kind == "train":
+        tr = AsyncTrainer(cfg, mesh, opt=OptConfig(),
+                          async_cfg=AsyncConfig(delay_rounds=1), rules=rules)
+        state = _with_sharding(tr.state_specs(), mesh, rules)
+        # params/gbuf/opt get their exact shardings from the trainer
+        sh = tr.state_shardings()
+        state = jax.tree_util.tree_map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            abstract_tree(tr.state_specs()), sh)
+        batch = _with_sharding(M.batch_specs(cfg, shape.global_batch, shape.seq_len),
+                               mesh, rules)
+        mask = jax.ShapeDtypeStruct((tr.n_groups,), jnp.float32,
+                                    sharding=NamedSharding(mesh, P()))
+        return {"state": state, "batch": batch, "mask": mask}
+    # params 2D-sharded (model x data) for serving too: 314B bf16 does not
+    # fit HBM tensor-parallel-only; XLA all-gathers per layer (costed in hlo)
+    params = _with_sharding(M.param_specs(cfg), mesh, rules, zero=True)
+    if shape.kind == "prefill":
+        batch = _with_sharding(M.batch_specs(cfg, shape.global_batch, shape.seq_len),
+                               mesh, rules)
+        return {"params": params, "batch": batch}
+    # decode
+    cache = _with_sharding(M.cache_specs(cfg, shape.global_batch, shape.seq_len),
+                           mesh, rules)
+    tok_spec = (P(tuple(a for a in rules.data_axes if a in mesh.axis_names))
+                if shape.global_batch % max(
+                    1, int(np.prod([mesh.shape[a] for a in rules.data_axes
+                                    if a in mesh.axis_names]))) == 0
+                and shape.global_batch > 1 else P(None))
+    tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                                  sharding=NamedSharding(mesh, tok_spec))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return {"params": params, "cache": cache, "tokens": tokens, "pos": pos}
+
+
+def build_step(cfg: ArchConfig, shape: InputShape, mesh, rules=DEFAULT_RULES,
+               microbatches: int = 1):
+    """→ (jitted fn, kwargs of ShapeDtypeStructs)."""
+    from ..distributed.sharding import sharded_trace
+
+    specs = input_specs(cfg, shape, mesh, rules)
+    if shape.kind == "train":
+        tr = AsyncTrainer(cfg, mesh, opt=OptConfig(),
+                          async_cfg=AsyncConfig(delay_rounds=1,
+                                                microbatches=microbatches),
+                          rules=rules)
+        state_sh = tr.state_shardings()
+        fn = jax.jit(tr.train_step_fn(), donate_argnums=(0,),
+                     out_shardings=(state_sh, None))
+        return fn, (specs["state"], specs["batch"], specs["mask"])
+    if shape.kind == "prefill":
+        def pre(params, batch):
+            return M.prefill(cfg, params, batch, ctx_len=shape.seq_len)
+        return jax.jit(sharded_trace(pre, mesh, rules)), \
+            (specs["params"], specs["batch"])
+
+    def serve(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos, shape.seq_len)
+    cache_sh = tree_shardings(M.cache_specs(cfg, shape.global_batch,
+                                            shape.seq_len), mesh, rules)
+    return jax.jit(sharded_trace(serve, mesh, rules), donate_argnums=(1,),
+                   out_shardings=(None, cache_sh)), \
+        (specs["params"], specs["cache"], specs["tokens"], specs["pos"])
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            rules: Rules = DEFAULT_RULES, verbose: bool = True,
+            microbatches: int = 1, auto: bool = False) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = arch_for_shape(get_arch(arch), shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if auto:
+        from ..distributed.sharding import auto_rules
+        rules = auto_rules(cfg, mesh.shape["model"])
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh_devices(mesh),
+        "family": cfg.family, "kind": shape.kind,
+        "sliding_window": cfg.sliding_window,
+        "ok": False,
+    }
+    try:
+        t0 = time.time()
+        fn, args = build_step(cfg, shape, mesh, rules,
+                              microbatches=microbatches)
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        }
+        # analytic per-device state bytes from the Spec tree (exact; the
+        # CPU backend's temp numbers include f32 upcasts of bf16 dot
+        # operands that a TPU would not materialise)
+        from ..distributed.sharding import bytes_per_device
+        if shape.kind == "train":
+            tr = AsyncTrainer(cfg, mesh, opt=OptConfig(),
+                              async_cfg=AsyncConfig(delay_rounds=1), rules=rules)
+            sp = tr.state_specs()
+            rec["analytic_state_bytes"] = (
+                bytes_per_device(sp["params"], mesh, rules, zero=True)
+                + bytes_per_device(sp["opt"]["m"], mesh, rules, zero=True)
+                + bytes_per_device(sp["opt"]["v"], mesh, rules, zero=True)
+                + bytes_per_device(sp["gbuf"], mesh, rules, zero=True))
+        else:
+            rec["analytic_state_bytes"] = bytes_per_device(
+                M.param_specs(cfg), mesh, rules, zero=True)
+            if shape.kind == "decode":
+                rec["analytic_state_bytes"] += bytes_per_device(
+                    M.cache_specs(cfg, shape.global_batch, shape.seq_len),
+                    mesh, rules)
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {k: float(ca[k]) for k in ("flops", "bytes accessed")
+                                if k in ca}
+        t2 = time.time()
+        rec["hlo_cost"] = hlo_cost.analyze(compiled.as_text()).as_dict()
+        rec["analyze_s"] = round(time.time() - t2, 2)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — a dry-run failure IS the signal
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = ""
+        if rec["ok"]:
+            gb = rec["memory"]["peak_bytes_est"] / 1e9
+            extra = (f"mem={gb:.2f}GB/dev flops={rec['hlo_cost']['dot_flops']:.3g} "
+                     f"coll={rec['hlo_cost']['collective_bytes']:.3g}B "
+                     f"lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        else:
+            extra = rec["error"][:160]
+        print(f"[{status}] {arch:24s} {shape_name:12s} {rec['mesh']:8s} {extra}",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) on both meshes")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--auto-rules", action="store_true",
+                    help="per-arch optimized sharding rules (beyond-paper)")
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+    n_ok = 0
+    for a, s, mp in combos:
+        rec = run_one(a, s, multi_pod=mp, auto=args.auto_rules)
+        n_ok += rec["ok"]
+        tag = f"{a}_{s}_{'mp' if mp else 'sp'}{args.suffix}.json"
+        with open(os.path.join(args.out, tag), "w") as f:
+            json.dump(rec, f, indent=1)
+    print(f"\n{n_ok}/{len(combos)} combinations lowered + compiled OK")
+    if n_ok < len(combos):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

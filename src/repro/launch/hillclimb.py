@@ -1,0 +1,76 @@
+"""§Perf hillclimbing harness: hypothesis → change → re-lower → measure.
+
+Each experiment is a named Rules/config variant applied to one
+(arch × shape); the harness lowers both baseline and variant, derives the
+roofline terms from the while-aware HLO cost model, and prints the deltas.
+Iterations and verdicts are recorded in EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair grok_train
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from ..distributed.sharding import Rules
+from .dryrun import run_one
+from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+
+def terms(rec):
+    hc = rec["hlo_cost"]
+    return {
+        "compute_s": hc["dot_flops"] / PEAK_FLOPS_BF16,
+        "memory_s": hc["hbm_bytes"] / HBM_BW,
+        "collective_s": hc["collective_bytes"] / ICI_BW,
+        "mem_gb": rec["memory"]["peak_bytes_est"] / 1e9,
+        "coll_breakdown": {k: round(v / 1e9, 2)
+                           for k, v in hc["collective_breakdown"].items()},
+    }
+
+
+def compare(arch, shape, variants, out=None):
+    """variants: list of (name, rules_or_None, extra_kwargs)."""
+    results = {}
+    for name, rules, kw in variants:
+        rec = run_one(arch, shape, rules=rules or Rules(), **kw)
+        results[name] = {"ok": rec["ok"],
+                         **(terms(rec) if rec["ok"] else
+                            {"error": rec.get("error")})}
+        t = results[name]
+        if rec["ok"]:
+            print(f"  {name:28s} comp={t['compute_s']:.3f}s "
+                  f"mem={t['memory_s']:.3f}s coll={t['collective_s']:.3f}s "
+                  f"hbm={t['mem_gb']:.1f}GB {t['coll_breakdown']}")
+        else:
+            print(f"  {name:28s} FAIL {t['error'][:120]}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+PAIRS = {
+    # most representative of the paper's technique + biggest model
+    "grok_train": ("grok-1-314b", "train_4k"),
+    # most collective-bound (expert-parallel MoE)
+    "deepseek_train": ("deepseek-moe-16b", "train_4k"),
+    # worst useful-compute ratio (14 unshardable heads)
+    "qwen2_prefill": ("qwen2-0.5b", "prefill_32k"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS), required=True)
+    ap.add_argument("--variants", default="baseline")
+    args = ap.parse_args()
+    arch, shape = PAIRS[args.pair]
+    print(f"== {arch} × {shape}")
+    compare(arch, shape, [("baseline", None, {})],
+            out=f"experiments/hillclimb_{args.pair}.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,299 @@
+"""HLO-text cost model with while-loop trip-count propagation.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — with
+scan-over-layers that undercounts a 64-layer model by 64×.  This module
+parses the optimized (post-SPMD-partitioning) HLO text and computes:
+
+* ``dot_flops``  — 2 · |result| · K per dot/convolution, × loop trip counts
+  (matmuls dominate these models by orders of magnitude),
+* ``hbm_bytes``  — Σ over top-level instructions of (operand + result) buffer
+  bytes, × trip counts.  Fusion bodies are *not* descended into for traffic
+  (a fusion reads its operands and writes its result once — exactly the HBM
+  model we want); they ARE descended into for dot flops,
+* ``collective_bytes`` — Σ operand bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute / collective-broadcast,
+  × trip counts.  These are *per-device* bytes (the module is the SPMD
+  per-device program); the roofline divides by per-link bandwidth directly.
+
+Operands are printed as name references in modern HLO text; shapes are
+resolved through a module-wide symbol table.  Trip counts come from the
+largest integer constant in the while condition computation (standard
+counted-loop shape); unknown loops default to 1 and are flagged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+_SKIP_TRAFFIC = {
+    "tuple", "get-tuple-element", "parameter", "constant", "while",
+    "conditional", "bitcast", "copy-start", "copy-done", "after-all",
+    "partition-id", "replica-id", "iota", "call",
+    # layout/dtype ops that fuse into neighbours on TPU; counting them
+    # (plus XLA:CPU's f32-upcast converts for bf16 dots) inflates the
+    # memory term several-fold relative to real TPU HBM traffic
+    "reshape", "broadcast", "convert", "copy", "transpose",
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _split_instr(line: str):
+    """Robustly split '%name = <type> opcode(<operands>)<attrs>'.
+
+    Handles tuple result types with /*index=N*/ comments and parenthesised
+    attrs (e.g. replica_groups=[4,2]<=[2,4]T(1,0)) that defeat one-shot
+    regexes.  Returns (name, type_text, opcode, operands, attrs) or None.
+    """
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    depth = 0
+    i = 0
+    opcode = None
+    while i < len(rest):
+        c = rest[i]
+        if c == "(":
+            j = i - 1
+            while j >= 0 and (rest[j].isalnum() or rest[j] in "-_"):
+                j -= 1
+            ident = rest[j + 1:i]
+            if depth == 0 and ident and not ident[0].isdigit():
+                opcode = ident
+                type_text = rest[:j + 1]
+                break
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    if opcode is None:
+        return None
+    # balanced operand region
+    k = i
+    d = 0
+    while k < len(rest):
+        if rest[k] == "(":
+            d += 1
+        elif rest[k] == ")":
+            d -= 1
+            if d == 0:
+                break
+        k += 1
+    operands = rest[i + 1:k]
+    attrs = rest[k + 1:]
+    return name, type_text, opcode, operands, attrs
+
+
+def _shape_text_bytes(text: str) -> int:
+    """Bytes of all dtype[dims] shapes appearing in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _first_shape_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(x) for x in m.group(1 + 1).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_text: str
+    operand_names: list
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class CostResult:
+    dot_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_breakdown: dict
+    n_while: int
+    unknown_trip_loops: int
+
+    def as_dict(self):
+        return {
+            "dot_flops": self.dot_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": dict(self.collective_breakdown),
+            "n_while": self.n_while,
+            "unknown_trip_loops": self.unknown_trip_loops,
+        }
+
+
+def parse_module(hlo: str):
+    """→ (computations: name → [Instr], entry_name, symbols: name → type text)."""
+    comps: dict[str, list[Instr]] = {}
+    symbols: dict[str, str] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            cur = m.group(1) if m else f"comp{len(comps)}"
+            comps[cur] = []
+            if stripped.startswith("ENTRY"):
+                entry = cur
+            # computation parameters carry shapes in the header
+            hdr = stripped[stripped.find("(") + 1: stripped.rfind("->")]
+            for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]))",
+                                  hdr):
+                symbols.setdefault(pm.group(1), pm.group(2))
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parts = _split_instr(line)
+        if parts:
+            nm, type_text, opcode, operands, attrs = parts
+            ins = Instr(name=nm, result_text=type_text, opcode=opcode,
+                        operand_names=_NAME_RE.findall(operands),
+                        attrs=attrs, line=line)
+            comps[cur].append(ins)
+            symbols[ins.name] = ins.result_text
+    return comps, entry, symbols
+
+
+def _callees(instr: Instr):
+    out = []
+    for key in ("calls", "to_apply", "body", "condition"):
+        for m in re.finditer(key + r"=%?([\w\.\-]+)", instr.attrs):
+            out.append((m.group(1), key))
+    return out
+
+
+def _find_trip_count(cond_instrs):
+    best = None
+    for ins in cond_instrs:
+        if ins.opcode == "constant" and ins.result_text.startswith(("s32", "u32", "s64", "u64")):
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                v = int(m.group(1))
+                if best is None or v > best:
+                    best = v
+    return best
+
+
+def analyze(hlo: str) -> CostResult:
+    comps, entry, symbols = parse_module(hlo)
+    if entry is None and comps:
+        entry = max(comps, key=lambda c: len(comps[c]))
+    multipliers: dict[str, float] = defaultdict(float)
+    unknown = [0]
+    n_while = [0]
+
+    def op_bytes(ins: Instr) -> int:
+        return sum(_shape_text_bytes(symbols.get(nm, "")) for nm in ins.operand_names)
+
+    def visit(name: str, mult: float):
+        if name not in comps:
+            return
+        multipliers[name] += mult
+        for ins in comps[name]:
+            if ins.opcode == "while":
+                n_while[0] += 1
+                body = cond = None
+                for nm, kind in _callees(ins):
+                    if kind == "body":
+                        body = nm
+                    elif kind == "condition":
+                        cond = nm
+                trip = _find_trip_count(comps.get(cond, [])) if cond else None
+                if trip is None or trip <= 0:
+                    trip = 1
+                    unknown[0] += 1
+                if body:
+                    visit(body, mult * trip)
+                if cond:
+                    visit(cond, mult * (trip + 1))
+            else:
+                for nm, _ in _callees(ins):
+                    visit(nm, mult)
+
+    if entry:
+        visit(entry, 1.0)
+
+    dot_flops = 0.0
+    hbm = 0.0
+    coll = 0.0
+    breakdown: dict[str, float] = defaultdict(float)
+    for name, instrs in comps.items():
+        m = multipliers.get(name, 0.0)
+        if m == 0.0:
+            continue
+        is_fusion_body = "fused" in name or name.startswith("wrapped_")
+        for ins in instrs:
+            if ins.opcode == "dot":
+                res = _SHAPE_RE.search(ins.result_text)
+                out_elems = 1
+                if res and res.group(2):
+                    for d in res.group(2).split(","):
+                        out_elems *= int(d)
+                lhs_text = symbols.get(ins.operand_names[0], "") if ins.operand_names else ""
+                lm = _SHAPE_RE.search(lhs_text)
+                lhs_dims = ([int(x) for x in lm.group(2).split(",")]
+                            if lm and lm.group(2) else [])
+                mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+                k = 1
+                if mm and lhs_dims:
+                    for idx in mm.group(1).split(","):
+                        if idx:
+                            k *= lhs_dims[int(idx)]
+                elif lhs_dims:
+                    k = lhs_dims[-1]
+                dot_flops += m * 2.0 * out_elems * k
+            elif ins.opcode == "convolution":
+                res = _SHAPE_RE.search(ins.result_text)
+                out_elems = 1
+                if res and res.group(2):
+                    for d in res.group(2).split(","):
+                        out_elems *= int(d)
+                ker = 1
+                if len(ins.operand_names) > 1:
+                    km = _SHAPE_RE.search(symbols.get(ins.operand_names[1], ""))
+                    if km and km.group(2):
+                        for d in km.group(2).split(","):
+                            ker *= int(d)
+                dot_flops += m * 2.0 * out_elems * ker
+            base = next((c for c in _COLLECTIVES if ins.opcode == c
+                         or ins.opcode.startswith(c + "-")), None)
+            if base:
+                nbytes = op_bytes(ins)
+                coll += m * nbytes
+                breakdown[base] += m * nbytes
+            if not is_fusion_body and ins.opcode not in _SKIP_TRAFFIC:
+                hbm += m * (op_bytes(ins) + _shape_text_bytes(ins.result_text))
+    return CostResult(dot_flops=dot_flops, hbm_bytes=hbm,
+                      collective_bytes=coll, collective_breakdown=breakdown,
+                      n_while=n_while[0], unknown_trip_loops=unknown[0])

@@ -1,0 +1,129 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+For each (arch × shape) on the single-pod mesh, derive the three roofline
+terms from the while-aware HLO cost model (per-device quantities — the
+partitioned module IS the per-device program):
+
+    compute_term    = dot_flops / PEAK_FLOPS_BF16          [s]
+    memory_term     = hbm_bytes / HBM_BW                   [s]
+    collective_term = collective_bytes / ICI_BW            [s]
+                      (per-device operand bytes through one link-equivalent)
+
+plus MODEL_FLOPS (6·N·D dense, 6·N_active·D MoE; 2·N·D for pure-forward
+prefill; N·2·D_batch for one decode token) and the usefulness ratio
+MODEL_FLOPS / (dot_flops × chips) — low ratios expose replicated compute
+(e.g. qwen2's 14 unshardable heads) and remat overhead.
+
+Usage: python -m repro.launch.roofline [--dir experiments/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from ..configs import ARCHS, SHAPES, get_arch
+from ..models import n_params, n_active_params
+from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful (algorithmic) FLOPs for the whole step, all chips."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    n_act = n_active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "audio":
+            tokens = shape.global_batch * (shape.seq_len
+                                           + shape.seq_len // cfg.dec_ratio)
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "audio":
+            tokens = shape.global_batch * (shape.seq_len
+                                           + shape.seq_len // cfg.dec_ratio)
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+def _suggest(dom: str, rec: dict) -> str:
+    arch, shape = rec["arch"], rec["shape"]
+    if dom == "collective":
+        return ("reduce collective volume: wider model-parallel tiles / "
+                "bf16 collectives / overlap FSDP all-gathers with compute")
+    if dom == "memory":
+        if rec["kind"] == "decode":
+            return ("decode is cache-bandwidth-bound: shrink/quantise the KV "
+                    "cache or raise batch to amortise weight reads")
+        return "fuse elementwise chains and cut remat recompute traffic"
+    return ("compute-bound: raise MFU via larger matmul tiles; if the "
+            "usefulness ratio is low, fix sharding to remove replicated work")
+
+
+def analyze_record(rec: dict, chips: int) -> dict:
+    hc = rec["hlo_cost"]
+    compute_t = hc["dot_flops"] / PEAK_FLOPS_BF16
+    memory_t = hc["hbm_bytes"] / HBM_BW
+    coll_t = hc["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(hc["dot_flops"] * chips, 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "family": rec["family"],
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_total": hc["dot_flops"] * chips,
+        "useful_ratio": useful,
+        "mem_gb_per_dev": rec["memory"]["peak_bytes_est"] / 1e9,
+        "suggestion": _suggest(dom, rec),
+    }
+
+
+def load_table(dirname: str, mesh: str = "sp") -> list:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, f"*_{mesh}.json"))):
+        rec = json.load(open(f))
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "error": rec.get("error", "?")})
+            continue
+        rows.append(analyze_record(rec, rec["n_devices"]))
+    return rows
+
+
+def render_markdown(rows: list) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | GB/dev |\n|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL: {r['error'][:40]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | "
+            f"{r['mem_gb_per_dev']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="sp", choices=["sp", "mp"])
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load_table(args.dir, args.mesh)
+    print(render_markdown(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Training launcher: --arch × --scheduler × mesh → AsyncTrainer loop.
+
+The production entry point.  On real hardware the mesh comes from
+``make_production_mesh``; on this container ``--host-mesh`` uses whatever
+devices exist (the reduced configs train end-to-end on CPU).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --host-mesh --steps 20 --scheduler shuffled --pattern poisson
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-sized variant of the arch family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--scheduler", default="shuffled",
+                    choices=["pure", "pure_waiting", "random", "fedbuff",
+                             "shuffled"])
+    ap.add_argument("--wait-b", type=int, default=1)
+    ap.add_argument("--pattern", default="poisson")
+    ap.add_argument("--n-groups", type=int, default=0,
+                    help="worker groups (0 = data-axis size)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--delay-rounds", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sync", action="store_true")
+    ap.add_argument("--host-mesh", action="store_true",
+                    help="use this host's devices instead of the 16x16 pod")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--auto-rules", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--heterogeneity", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from ..configs import get_arch
+    from ..core import (TimingModel, build_schedule, round_masks,
+                        make_scheduler, heterogeneous_speeds)
+    from ..data import DataConfig, HeterogeneousTokenPipeline
+    from ..distributed import AsyncTrainer, AsyncConfig, DEFAULT_RULES, auto_rules
+    from ..models import n_params, batch_specs
+    from ..optim import OptConfig
+    from .. import checkpoint
+    from .mesh import make_production_mesh, make_host_mesh
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().with_(remat="none")
+    mesh = make_host_mesh() if args.host_mesh else \
+        make_production_mesh(multi_pod=args.multi_pod)
+    rules = auto_rules(cfg, mesh.shape.get("model", 1)) if args.auto_rules \
+        else DEFAULT_RULES
+
+    tr = AsyncTrainer(cfg, mesh,
+                      opt=OptConfig(lr=args.lr, clip_norm=1.0),
+                      async_cfg=AsyncConfig(
+                          delay_rounds=0 if args.sync else args.delay_rounds,
+                          microbatches=args.microbatches),
+                      rules=rules)
+    n_groups = args.n_groups or tr.n_groups
+    tr.n_groups = n_groups
+    if args.global_batch % n_groups:
+        raise SystemExit(f"--global-batch must divide {n_groups} groups")
+
+    print(f"arch={cfg.name} params={n_params(cfg)/1e6:.1f}M mesh={dict(mesh.shape)} "
+          f"groups={n_groups} scheduler={args.scheduler} b={args.wait_b} "
+          f"delay={0 if args.sync else args.delay_rounds}")
+
+    sched = make_scheduler(args.scheduler, n_groups, b=args.wait_b,
+                           seed=args.seed)
+    tm = TimingModel(heterogeneous_speeds(n_groups, 6.0), args.pattern,
+                     seed=args.seed)
+    masks = round_masks(build_schedule(sched, tm, args.steps * sched.wait_b))
+
+    pipe = HeterogeneousTokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.global_batch,
+        n_groups=n_groups, heterogeneity=args.heterogeneity, seed=args.seed))
+    state = tr.init_state(jax.random.PRNGKey(args.seed))
+    step = jax.jit(tr.train_step_fn())
+
+    def make_batch(i):
+        b = {"tokens": jnp.asarray(pipe.batch(i)["tokens"])}
+        for k, sp in batch_specs(cfg, args.global_batch, args.seq_len).items():
+            if k != "tokens" and sp.dtype != "int32":   # stubbed modalities
+                b[k] = jax.random.normal(jax.random.PRNGKey(i), sp.shape,
+                                         jnp.float32)
+            elif k == "tokens":
+                b[k] = b[k][:, :sp.shape[1]]
+        return b
+
+    t0 = time.time()
+    for i in range(min(args.steps, masks.shape[0])):
+        state, m = step(state, make_batch(i), jnp.asarray(masks[i]))
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"|g|={float(m['grad_norm']):.3f} "
+                  f"part={float(m['participation']):.2f} "
+                  f"{time.time()-t0:7.1f}s", flush=True)
+        if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, state, step=i + 1,
+                            meta={"arch": cfg.name})
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state, step=args.steps,
+                        meta={"arch": cfg.name})
+        print("final checkpoint:", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+from .specs import Spec, init_tree, abstract_tree, axes_tree, count_params
+from .model import (
+    param_specs,
+    init_params,
+    n_params,
+    n_active_params,
+    forward_logits,
+    loss_fn,
+    cache_specs,
+    prefill,
+    init_cache,
+    decode_step,
+    batch_specs,
+)
+from . import layers
+
+__all__ = [
+    "Spec", "init_tree", "abstract_tree", "axes_tree", "count_params",
+    "param_specs", "init_params", "n_params", "n_active_params",
+    "forward_logits", "loss_fn", "cache_specs", "prefill", "init_cache", "decode_step",
+    "batch_specs", "layers",
+]

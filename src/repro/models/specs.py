@@ -1,0 +1,105 @@
+"""Declarative parameter specs with logical sharding axes.
+
+Every parameter is declared once as a :class:`Spec` — shape, logical axis
+names, init rule, dtype.  From the same declaration we derive:
+
+* materialised parameters (``init_tree``),
+* abstract ShapeDtypeStructs for dry-runs (``abstract_tree``),
+* NamedShardings via the logical-axis rules in ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple                    # logical axis names (or None), len == ndim
+    init: str = "normal"           # normal | zeros | ones | embed | fan_in | mamba_A | mamba_dt
+    dtype: str = "bfloat16"
+    scale: float = 1.0             # multiplier on the init stddev
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _fan_in(shape, axes):
+    """Contraction fan-in: everything that is not an obvious output axis."""
+    # convention: last axis (or the axes after 'embed'-like input dims) is out.
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1])) if len(shape) == 2 else int(shape[0] * (shape[1] if len(shape) > 2 else 1))
+
+
+def materialize(spec: Spec, key) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "mamba_A":          # A_log with A ∈ [1, 16]
+        a = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(a).astype(dt)
+    if spec.init == "mamba_dt":         # dt bias: softplus^{-1} of dt ∈ [1e-3, 1e-1]
+        dt0 = jnp.exp(jax.random.uniform(key, spec.shape, jnp.float32,
+                                         math.log(1e-3), math.log(1e-1)))
+        return (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(dt)
+    if spec.init == "embed":
+        std = 1.0
+    elif spec.init == "fan_in":
+        std = 1.0 / math.sqrt(max(_fan_in(spec.shape, spec.axes), 1))
+    else:  # "normal"
+        std = 0.02
+    x = jax.random.normal(key, spec.shape, jnp.float32) * (std * spec.scale)
+    return x.astype(dt)
+
+
+def init_tree(specs, key):
+    """Materialise a pytree of Specs with per-leaf folded keys (deterministic
+    regardless of traversal order — keys are derived from the leaf path)."""
+    import zlib
+
+    leaves = jax.tree_util.tree_leaves_with_path(specs, is_leaf=lambda x: isinstance(x, Spec))
+    out = {}
+    flat = {}
+    for path, spec in leaves:
+        name = jax.tree_util.keystr(path)
+        # crc32, not hash(): Python string hashing is randomised per process,
+        # which would make init non-reproducible across runs
+        sub = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2 ** 31))
+        flat[name] = materialize(spec, sub)
+    # rebuild tree
+    def build(tree):
+        if isinstance(tree, Spec):
+            raise AssertionError
+        return tree
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: flat[jax.tree_util.keystr(p)], specs,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def abstract_tree(specs):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def axes_tree(specs):
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, Spec)))

@@ -1,0 +1,5 @@
+from .logreg import LogRegProblem
+from .synthetic import make_synthetic, make_libsvm_like
+from .quadratic import QuadraticProblem
+
+__all__ = ["LogRegProblem", "make_synthetic", "make_libsvm_like", "QuadraticProblem"]

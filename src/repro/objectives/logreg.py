@@ -1,0 +1,94 @@
+"""The paper's experimental objective (§5):
+
+    f_i(x) = (1/m) Σ_j log(1 + exp(−b_ij a_ijᵀ x)) + λ Σ_k x_k²/(1 + x_k²)
+
+Nonconvex regulariser makes the problem non-convex; each worker i owns its
+own dataset (a_i, b_i) — heterogeneity enters through the data.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LogRegProblem:
+    """Distributed logistic regression + nonconvex regulariser.
+
+    features: (n_workers, m, d); labels: (n_workers, m) in {−1, +1}.
+    Exposes jax-pure per-worker full/stochastic gradients and global loss —
+    the exact plug for :func:`repro.core.simulator.replay`.
+    """
+
+    def __init__(self, features, labels, lam: float = 0.1, batch_size: int | None = None):
+        self.A = jnp.asarray(features, dtype=jnp.float32)
+        self.b = jnp.asarray(labels, dtype=jnp.float32)
+        if self.A.ndim != 3 or self.b.shape != self.A.shape[:2]:
+            raise ValueError("features (n,m,d) and labels (n,m) expected")
+        self.n, self.m, self.d = self.A.shape
+        self.lam = float(lam)
+        self.batch_size = batch_size  # None → full local gradient
+
+    # ---- losses -------------------------------------------------------------
+    def _reg(self, x):
+        return self.lam * jnp.sum(x * x / (1.0 + x * x))
+
+    def local_loss(self, x, worker):
+        a = self.A[worker]
+        b = self.b[worker]
+        z = -b * (a @ x)
+        return jnp.mean(jnp.logaddexp(0.0, z)) + self._reg(x)
+
+    def loss(self, x):
+        z = -self.b * jnp.einsum("nmd,d->nm", self.A, x)
+        return jnp.mean(jnp.logaddexp(0.0, z)) + self._reg(x)
+
+    # ---- gradients ------------------------------------------------------------
+    def local_grad(self, x, worker):
+        """Full local gradient ∇f_i(x)."""
+        return jax.grad(self.local_loss)(x, worker)
+
+    def stochastic_grad(self, x, worker, key):
+        """Mini-batch gradient over the worker's local data (Assumption 2)."""
+        bs = self.batch_size or self.m
+        idx = jax.random.choice(key, self.m, (bs,), replace=False)
+        a = self.A[worker][idx]
+        b = self.b[worker][idx]
+
+        def f(x):
+            z = -b * (a @ x)
+            return jnp.mean(jnp.logaddexp(0.0, z)) + self._reg(x)
+
+        return jax.grad(f)(x)
+
+    def full_grad(self, x):
+        return jax.grad(self.loss)(x)
+
+    # ---- plugs for the simulator ----------------------------------------------
+    def grad_fn(self, stochastic: bool = False):
+        if stochastic:
+            return lambda x, w, key: self.stochastic_grad(x, w, key)
+        return lambda x, w, key: self.local_grad(x, w)
+
+    def per_worker_grad_fn(self):
+        return lambda x, w: self.local_grad(x, w)
+
+    # ---- problem constants for theory.py ---------------------------------------
+    def smoothness_bound(self) -> float:
+        """L ≤ max_i ||A_i||²_op/(4m) + 2λ (logistic) — cheap upper bound."""
+        A = np.asarray(self.A)
+        ops = [np.linalg.norm(A[i], ord=2) ** 2 / (4.0 * self.m) for i in range(self.n)]
+        return float(max(ops) + 2.0 * self.lam)
+
+    def zeta(self, x) -> float:
+        gs = np.stack([np.asarray(self.local_grad(jnp.asarray(x), i)) for i in range(self.n)])
+        gbar = gs.mean(0)
+        return float(np.max(np.linalg.norm(gs - gbar, axis=-1)))
+
+    # ---- single-node view (each data point = one client, §3.2) -----------------
+    def as_single_node(self) -> "LogRegProblem":
+        A = np.asarray(self.A).reshape(self.n * self.m, 1, self.d)
+        b = np.asarray(self.b).reshape(self.n * self.m, 1)
+        return LogRegProblem(A, b, lam=self.lam)

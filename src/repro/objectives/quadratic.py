@@ -1,0 +1,41 @@
+"""Analytic quadratic objective — exact closed forms for unit tests.
+
+f_i(x) = ½ (x − c_i)ᵀ H_i (x − c_i);  ∇f_i(x) = H_i (x − c_i).
+With identical H_i = I the AsGrad replay admits a hand-computable
+trajectory, which the tests exploit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuadraticProblem:
+    def __init__(self, centers, hessians=None):
+        self.c = jnp.asarray(centers, dtype=jnp.float32)     # (n, d)
+        self.n, self.d = self.c.shape
+        if hessians is None:
+            hessians = np.stack([np.eye(self.d)] * self.n)
+        self.H = jnp.asarray(hessians, dtype=jnp.float32)    # (n, d, d)
+
+    def local_grad(self, x, worker):
+        return self.H[worker] @ (x - self.c[worker])
+
+    def full_grad(self, x):
+        return jnp.mean(jax.vmap(lambda H, c: H @ (x - c))(self.H, self.c), axis=0)
+
+    def loss(self, x):
+        r = x[None, :] - self.c
+        return 0.5 * jnp.mean(jnp.einsum("nd,ndk,nk->n", r, self.H, r))
+
+    def grad_fn(self, stochastic: bool = False):
+        return lambda x, w, key: self.local_grad(x, w)
+
+    def per_worker_grad_fn(self):
+        return lambda x, w: self.local_grad(x, w)
+
+    def minimizer(self):
+        Hbar = np.mean(np.asarray(self.H), axis=0)
+        rhs = np.mean(np.einsum("ndk,nk->nd", np.asarray(self.H), np.asarray(self.c)), axis=0)
+        return np.linalg.solve(Hbar, rhs)

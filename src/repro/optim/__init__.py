@@ -1,0 +1,7 @@
+from .optimizers import (
+    adam_init, adam_update, sgd_update, global_norm, clip_by_global_norm,
+    OptConfig, make_optimizer,
+)
+
+__all__ = ["adam_init", "adam_update", "sgd_update", "global_norm",
+           "clip_by_global_norm", "OptConfig", "make_optimizer"]

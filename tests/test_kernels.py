@@ -1,0 +1,211 @@
+"""Pallas kernels vs pure-jnp oracles — interpret=True shape/dtype sweeps."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.async_update import async_update_pallas, fused_adam_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+
+def _qkv(B, Sq, Sk, H, KV, D, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,D,bq,bk", [
+    (1, 128, 128, 4, 4, 64, 64, 64),      # MHA square
+    (2, 256, 256, 8, 2, 64, 128, 64),     # GQA 4:1
+    (1, 96, 160, 4, 1, 32, 64, 64),       # ragged (padding path), MQA
+    (1, 512, 512, 2, 2, 128, 128, 128),   # larger blocks
+])
+def test_flash_attention_causal(dtype, B, Sq, Sk, H, KV, D, bq, bk):
+    q, k, v = _qkv(B, Sq, Sk, H, KV, D, dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=bq, block_k=bk,
+                                 interpret=True)
+    want = ref.reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 64, 1000])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _qkv(1, 256, 256, 4, 4, 64, jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    want = ref.reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _qkv(2, 128, 192, 4, 4, 64, jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=False, block_q=64,
+                                 block_k=64, interpret=True)
+    want = ref.reference_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel ≡ the model's chunked-jnp attention (the TPU swap-in point)."""
+    from repro.models.layers import attention
+    q, k, v = _qkv(1, 256, 256, 8, 4, 64, jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                 block_k=64, interpret=True)
+    want = attention(q, k, v, causal=True, dense_max=64, chunk_q=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [128 * 256, 128 * 256 + 37, 1000])
+def test_async_update_kernel(dtype, n):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    p = jax.random.normal(ks[0], (n,), jnp.float32).astype(dtype)
+    gb = jax.random.normal(ks[1], (n,), jnp.float32).astype(dtype)
+    g = jax.random.normal(ks[2], (n,), jnp.float32).astype(dtype)
+    got_p, got_b = async_update_pallas(p, gb, g, lr=0.01, clip_scale=0.5,
+                                       delay_scale=0.25, interpret=True)
+    want_p, want_b = ref.reference_async_update(p, gb, g, lr=0.01,
+                                                clip_scale=0.5,
+                                                delay_scale=0.25)
+    np.testing.assert_allclose(np.asarray(got_p, np.float32),
+                               np.asarray(want_p, np.float32), **TOL[dtype])
+    np.testing.assert_array_equal(np.asarray(got_b, np.float32),
+                                  np.asarray(want_b, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("count", [1, 100])
+def test_fused_adam_kernel(dtype, count):
+    n = 4096 + 17
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    p = jax.random.normal(ks[0], (n,), jnp.float32).astype(dtype)
+    m = jax.random.normal(ks[1], (n,), jnp.float32) * 0.1
+    v = jax.random.uniform(ks[2], (n,), jnp.float32) * 0.01
+    g = jax.random.normal(ks[3], (n,), jnp.float32).astype(dtype)
+    got = fused_adam_pallas(p, m, v, g, lr=1e-3, count=count, interpret=True)
+    want = ref.reference_fused_adam(p, m, v, g, lr=1e-3, beta1=0.9,
+                                    beta2=0.95, eps=1e-8,
+                                    bc1=1 - 0.9 ** count,
+                                    bc2=1 - 0.95 ** count)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+                                   atol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("c,H,P,N", [(16, 2, 32, 16), (64, 4, 64, 32)])
+def test_ssd_chunk_kernel_vs_sequential(dtype, c, H, P, N):
+    """Kernel intra-chunk output + state vs the sequential recurrence."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = (jax.random.normal(ks[0], (c, H, P), jnp.float32) * 0.5).astype(dtype)
+    dt = jax.random.uniform(ks[1], (c, H), jnp.float32, 0.01, 0.2)
+    A = -jax.random.uniform(ks[2], (H,), jnp.float32, 0.5, 2.0)
+    B_ = jax.random.normal(ks[3], (c, N), jnp.float32) * 0.3
+    C_ = jax.random.normal(jax.random.PRNGKey(5), (c, N), jnp.float32) * 0.3
+    y, st = ssd_chunk_pallas(x[None, None], dt[None, None], A,
+                             B_[None, None], C_[None, None], interpret=True)
+    want_y, want_h = ref.reference_ssd_chunk(x, dt, A, B_, C_)
+    tol = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(y[0, 0], np.float32),
+                               np.asarray(want_y, np.float32), **tol)
+    # kernel emits (N, P); oracle (H, P, N)
+    np.testing.assert_allclose(
+        np.asarray(st[0, 0], np.float32),
+        np.asarray(want_h, np.float32).transpose(0, 2, 1), **tol)
+
+
+def test_ssd_chunk_matches_model_ssd():
+    """Kernel composed with the inter-chunk scan ≡ layers.ssd_chunked."""
+    from repro.models.layers import ssd_chunked
+    B, S, H, P, N, c = 2, 128, 2, 32, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.5
+    dt = jax.random.uniform(ks[1], (B, S, H), jnp.float32, 0.01, 0.2)
+    A = -jax.random.uniform(ks[2], (H,), jnp.float32, 0.5, 2.0)
+    B_ = jax.random.normal(ks[3], (B, S, N), jnp.float32) * 0.3
+    C_ = jax.random.normal(ks[4], (B, S, N), jnp.float32) * 0.3
+    want_y, want_h = ssd_chunked(x, dt, A, B_, C_, chunk=c)
+
+    nc = S // c
+    xr = x.reshape(B, nc, c, H, P)
+    dtr = dt.reshape(B, nc, c, H)
+    Br = B_.reshape(B, nc, c, N)
+    Cr = C_.reshape(B, nc, c, N)
+    y_diag, states = ssd_chunk_pallas(xr, dtr, A, Br, Cr, interpret=True)
+    # inter-chunk recurrence + offset (same composition as the model)
+    la = dt.astype(jnp.float32) * A[None, None, :]
+    cums = jnp.cumsum(la.reshape(B, nc, c, H), axis=2)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])
+    st = jnp.moveaxis(states, -1, -2)                     # (B,nc,H,P,N)
+
+    def step(h, inp):
+        s, dec = inp
+        return h * dec[..., None, None] + s, h
+
+    hT, h_prev = jax.lax.scan(
+        step, jnp.zeros((B, H, P, N), jnp.float32),
+        (jnp.moveaxis(st, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)
+    y_off = jnp.einsum("bkin,bkhpn,bkih->bkihp",
+                       Cr.astype(jnp.float32), h_prev, jnp.exp(cums))
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(B, S, H, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want_y, np.float32),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(want_h),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ops_wrappers_dispatch():
+    q, k, v = _qkv(1, 64, 64, 2, 2, 32, jnp.float32)
+    a = ops.flash_attention(q, k, v, interpret=True)
+    b = ops.flash_attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_model_forward_with_flash_kernel_path():
+    """cfg.use_flash_attention routes attention through the Pallas kernel
+    (interpret on CPU) and matches the jnp path."""
+    from repro.configs import get_arch
+    from repro.models import init_params, forward_logits
+    cfg = get_arch("qwen3-8b").reduced().with_(remat="none", n_layers=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0, cfg.vocab)
+    base, _ = forward_logits(cfg, params, {"tokens": tokens})
+    flash, _ = forward_logits(cfg.with_(use_flash_attention=True), params,
+                              {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(flash, np.float32),
+                               np.asarray(base, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_model_forward_with_ssd_kernel_path():
+    """cfg.use_ssd_kernel routes the SSD intra-chunk compute through the
+    Pallas kernel and matches the jnp path."""
+    from repro.configs import get_arch
+    from repro.models import init_params, forward_logits
+    cfg = get_arch("mamba2-370m").reduced().with_(remat="none", n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    base, _ = forward_logits(cfg, params, {"tokens": tokens})
+    kern, _ = forward_logits(cfg.with_(use_ssd_kernel=True), params,
+                             {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(kern, np.float32),
+                               np.asarray(base, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,195 @@
+"""Per-architecture smoke tests: reduced variant of the same family, one
+forward + one train-gradient step + one decode step on CPU; asserts output
+shapes and absence of NaNs (the brief's required smoke coverage)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import (
+    param_specs, init_params, n_params, n_active_params,
+    forward_logits, loss_fn, init_cache, decode_step, batch_specs,
+    init_tree, abstract_tree,
+)
+from repro.models.specs import Spec
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _batch(cfg, B=2, S=32, key=jax.random.PRNGKey(1)):
+    specs = batch_specs(cfg, B, S)
+    b = {}
+    for k, sp in specs.items():
+        kk = jax.random.fold_in(key, hash(k) % 1000)
+        if sp.dtype == "int32":
+            b[k] = jax.random.randint(kk, sp.shape, 0, cfg.vocab, jnp.int32)
+        else:
+            b[k] = jax.random.normal(kk, sp.shape, jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg = get_arch(name).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: forward_logits(cfg, p, b))(params, batch)
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1]
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_grad_finite(name):
+    cfg = get_arch(name).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, b):
+        (l, m), g = jax.value_and_grad(
+            lambda q: loss_fn(cfg, q, b), has_aux=True)(p)
+        return l, g
+
+    loss, grads = step(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    # at least some gradient signal everywhere except unused stubs
+    nonzero = sum(float(jnp.abs(g.astype(jnp.float32)).sum()) > 0 for g in leaves)
+    assert nonzero / len(leaves) > 0.8
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_step(name):
+    cfg = get_arch(name).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, ctx = 2, 16
+    cache = init_cache(cfg, B, ctx)
+    tok = jnp.array([1, 2], jnp.int32)
+
+    step = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, ctx))
+    logits, cache = step(params, cache, tok, jnp.int32(0))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # a few more steps reuse the cache without shape drift
+    for pos in range(1, 4):
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_param_counts_match_assignment_scale():
+    """Full (non-reduced) configs hit the advertised parameter scale."""
+    expect = {
+        "grok-1-314b": (250e9, 380e9),
+        "deepseek-moe-16b": (13e9, 20e9),
+        "minitron-8b": (7e9, 10e9),
+        "qwen2-0.5b": (0.3e9, 0.7e9),
+        "stablelm-1.6b": (1.2e9, 2.2e9),
+        "zamba2-7b": (6e9, 9e9),
+        "mamba2-370m": (0.25e9, 0.5e9),
+        "seamless-m4t-large-v2": (1.2e9, 2.8e9),
+        "pixtral-12b": (10e9, 14e9),
+        "qwen3-8b": (6.5e9, 10e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = n_params(get_arch(name))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_arch("grok-1-314b")
+    act = n_active_params(cfg)
+    tot = n_params(cfg)
+    assert act < tot
+    # top-2 of 8 experts → roughly a quarter of expert params active
+    assert 0.2 * tot < act < 0.5 * tot
+
+
+def test_decode_matches_prefill_dense():
+    """Sequential decode of a short prompt reproduces full-forward logits."""
+    cfg = get_arch("qwen2-0.5b").reduced().with_(remat="none")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    full, _ = forward_logits(cfg, params, {"tokens": tokens})
+    cache = init_cache(cfg, B, S)
+    step = jax.jit(lambda c, t, pos: decode_step(cfg, params, c, t, pos, S))
+    outs = []
+    for pos in range(S):
+        lg, cache = step(cache, tokens[:, pos], jnp.int32(pos))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_prefill_ssm():
+    """Same equivalence for the SSD recurrence (chunked scan vs step)."""
+    cfg = get_arch("mamba2-370m").reduced().with_(remat="none")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    full, _ = forward_logits(cfg, params, {"tokens": tokens})
+    cache = init_cache(cfg, B, S)
+    step = jax.jit(lambda c, t, pos: decode_step(cfg, params, c, t, pos, S))
+    outs = []
+    for pos in range(S):
+        lg, cache = step(cache, tokens[:, pos], jnp.int32(pos))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_sliding_window_attention_restricts_context():
+    """With window W, logits for position t only depend on tokens > t−W."""
+    cfg = get_arch("qwen3-8b").reduced().with_(sliding_window=4, remat="none",
+                                               n_layers=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    S = 12
+    t1 = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab)   # perturb an early token
+    l1, _ = forward_logits(cfg, params, {"tokens": t1})
+    l2, _ = forward_logits(cfg, params, {"tokens": t2})
+    # last position is > W away from position 0 → unchanged
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-4, atol=1e-4)
+    # position 1 IS affected
+    assert not np.allclose(np.asarray(l1[0, 1]), np.asarray(l2[0, 1]), atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "mamba2-370m", "zamba2-7b",
+                                  "seamless-m4t-large-v2", "deepseek-moe-16b",
+                                  "pixtral-12b"])
+def test_prefill_then_decode_matches_full_forward(name):
+    """prefill(prompt) + decode(next tokens) ≡ forward over the whole seq."""
+    from repro.models import prefill
+    # capacity_factor high enough that no MoE token drops — capacity-based
+    # routing otherwise differs legitimately between prompt- and step-batches
+    cfg = get_arch(name).reduced().with_(remat="none", capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B=B, S=S)
+    full, _ = forward_logits(cfg, params, batch)
+    tok = batch["tokens"]
+    S_dec = tok.shape[1]          # audio decoders are shorter than S
+    split = max(S_dec - 6, S_dec // 2)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = tok[:, :split]
+    S = S_dec
+    last, cache = prefill(cfg, params, pre_batch, ctx_len=S)
+    np.testing.assert_allclose(np.asarray(last, np.float32),
+                               np.asarray(full[:, split - 1], np.float32),
+                               rtol=5e-2, atol=5e-2)
+    step = jax.jit(lambda c, t, pos: decode_step(cfg, params, c, t, pos, S))
+    for pos in range(split, S):
+        lg, cache = step(cache, tok[:, pos], jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                   np.asarray(full[:, pos], np.float32),
+                                   rtol=7e-2, atol=7e-2)

@@ -1,0 +1,164 @@
+"""Sharding rules: pure PartitionSpec logic (no multi-device needed)."""
+import numpy as np
+import jax
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    Rules, DEFAULT_RULES, logical_pspec, zero_pspec, tree_pspecs,
+    bytes_per_device,
+)
+from repro.models import param_specs, cache_specs, batch_specs
+from repro.configs import get_arch
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape / .axis_names are consulted by the rules."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+M1 = FakeMesh({"data": 16, "model": 16})
+M2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_heads_get_model_axis():
+    # qwen3: 32 heads over model=16 → heads sharded
+    p = logical_pspec(("embed", "heads", "head"), (4096, 32, 128), M1)
+    assert p == P(None, "model", None)
+
+
+def test_kv_fallback_to_embed():
+    # grok wk: kv=8 does not divide 16 → embed picks up the model axis
+    p = logical_pspec(("embed", "kv_heads", "head"), (6144, 8, 128), M1)
+    assert p == P("model", None, None)
+
+
+def test_experts_fallback_to_ff():
+    # grok experts: E=8 fails, per-expert ff 32768 divides → ff sharded
+    p = logical_pspec(("layers", "experts", "embed", "ff"),
+                      (64, 8, 6144, 32768), M1)
+    assert p == P(None, None, None, "model")
+    # deepseek: E=64 divides → expert-parallel
+    p = logical_pspec(("layers", "experts", "embed", "ff"),
+                      (28, 64, 2048, 1408), M1)
+    assert p == P(None, "model", None, None)
+
+
+def test_batch_over_pod_and_data():
+    p = logical_pspec(("batch", "seq"), (256, 4096), M2)
+    assert p == P(("pod", "data"), None)
+    # batch=1 (long_500k) → replicated
+    p = logical_pspec(("batch", "seq"), (1, 524288), M2)
+    assert p == P(None, None)
+    # batch=32 on 2×16 pods divides → both axes
+    p = logical_pspec(("batch", "seq"), (32, 32768), M2)
+    assert p == P(("pod", "data"), None)
+
+
+def test_kv_cache_ctx_sharding_when_kv_heads_fail():
+    # grok decode cache: kv=8 fails → ctx dim takes the model axis
+    p = logical_pspec(("layers", "batch", "ctx", "kv_heads", "head"),
+                      (64, 128, 32768, 8, 128), M1)
+    assert p == P(None, "data", "model", None, None)
+
+
+def test_zero_shards_opt_state_over_data():
+    """FSDP shards a *tensor* dim (embed), never the layers dim — a
+    layers-sharded stack would force whole-stack all-gathers (see Rules)."""
+    axes = ("layers", "experts", "embed", "ff")
+    shape = (64, 8, 6144, 32768)
+    base = logical_pspec(axes, shape, M1)
+    z = zero_pspec(axes, shape, M1, base)
+    assert z == P(None, None, "data", "model")
+
+
+def test_zero_noop_when_data_axis_taken():
+    axes = ("batch", "embed")
+    shape = (256, 512)
+    base = logical_pspec(axes, shape, M1)
+    z = zero_pspec(axes, shape, M1, base)
+    assert z == base
+
+
+@pytest.mark.parametrize("name", ["grok-1-314b", "qwen3-8b", "mamba2-370m",
+                                  "zamba2-7b", "seamless-m4t-large-v2"])
+def test_param_tree_pspecs_cover_all_leaves(name):
+    cfg = get_arch(name)
+    specs = param_specs(cfg)
+    ps = tree_pspecs(specs, M1)
+    leaves = jax.tree_util.tree_leaves(ps, is_leaf=lambda x: isinstance(x, P))
+    assert leaves and all(isinstance(l, P) for l in leaves)
+
+
+def test_bytes_per_device_fits_v5e_train():
+    """Analytic memory: grok-1 train state (bf16 params + f32 m,v ZeRO over
+    data) must land under the 16 GB/chip HBM of v5e on the 16×16 mesh."""
+    from repro.distributed import AsyncTrainer, AsyncConfig
+    cfg = get_arch("grok-1-314b")
+    tr = AsyncTrainer.__new__(AsyncTrainer)   # only need state_specs
+    tr.cfg = cfg
+    tr.async_cfg = AsyncConfig(delay_rounds=1)
+    specs = tr.state_specs()
+    total = (bytes_per_device(specs["params"], M1, zero=True)
+             + bytes_per_device(specs["opt"]["m"], M1, zero=True)
+             + bytes_per_device(specs["opt"]["v"], M1, zero=True)
+             + bytes_per_device(specs["gbuf"], M1, zero=True))
+    assert total < 16e9, f"{total/1e9:.1f} GB/chip"
+
+
+def test_custom_rules_change_assignment():
+    rules = Rules(model_priority=("ff", "heads"))
+    p = logical_pspec(("embed", "heads", "head"), (4096, 32, 128), M1, rules)
+    assert p == P(None, "model", None)
+    p2 = logical_pspec(("embed", "ff"), (4096, 12288), M1, rules)
+    assert p2 == P(None, "model")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests: the rules never produce an illegal PartitionSpec
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st
+
+_NAMES = [None, "batch", "seq", "embed", "heads", "kv_heads", "ff", "vocab",
+          "experts", "layers", "ctx", "d_inner", "ssm_heads", "capacity",
+          "act_embed", "head", "state", "conv"]
+
+
+@settings(max_examples=120, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 4096), min_size=1, max_size=5),
+    names=st.lists(st.sampled_from(_NAMES), min_size=1, max_size=5),
+    data=st.sampled_from([1, 2, 4, 16]),
+    model=st.sampled_from([1, 2, 8, 16]),
+    pod=st.sampled_from([0, 2]),
+    zero=st.booleans(),
+    seq_rules=st.booleans(),
+)
+def test_property_pspec_legal(dims, names, data, model, pod, zero, seq_rules):
+    n = min(len(dims), len(names))
+    dims, names = tuple(dims[:n]), tuple(names[:n])
+    shape = {"data": data, "model": model}
+    if pod:
+        shape = {"pod": pod, **shape}
+    mesh = FakeMesh(shape)
+    rules = DEFAULT_RULES
+    if seq_rules:
+        rules = Rules(model_priority=DEFAULT_RULES.model_priority + ("seq",))
+    spec = logical_pspec(names, dims, mesh, rules)
+    if zero:
+        spec = zero_pspec(names, dims, mesh, spec, rules)
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            assert a in mesh.axis_names          # only real mesh axes
+            assert a not in used                 # each mesh axis used once
+            used.append(a)
+            total *= mesh.shape[a]
+        assert dims[i] % total == 0, (dims, names, spec)  # always divisible

@@ -1,0 +1,155 @@
+"""Tests for Table-1 rate calculator + Defs 3–4 estimators vs proof bounds."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TimingModel,
+    build_schedule,
+    replay,
+    PureAsync,
+    ShuffledAsync,
+    heterogeneous_speeds,
+)
+from repro.core.theory import (
+    ProblemConstants,
+    pure_async,
+    pure_async_waiting,
+    random_async,
+    fedbuff,
+    shuffled_async,
+    minibatch_sgd,
+    sgd_rr,
+    shuffled_beats_random,
+    stepsize_pure_async,
+    stepsize_random_async,
+    stepsize_shuffled_async,
+)
+from repro.core.trace import sequence_correlation, delay_variance, heterogeneity_zeta
+from repro.objectives import QuadraticProblem
+
+
+C = ProblemConstants(L=1.0, F0=1.0, sigma2=1.0, zeta2=0.5, G=2.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.integers(100, 10_000), tc=st.integers(1, 32), tm=st.integers(1, 64))
+def test_rates_decrease_in_T(T, tc, tm):
+    tm = max(tm, tc)
+    r1 = pure_async(C, T, tc, tm)
+    r2 = pure_async(C, 4 * T, tc, tm)
+    assert r2 <= r1 + 1e-12
+    assert r1 >= C.zeta2  # the ζ² floor (pure async stalls at heterogeneity)
+
+
+def test_pure_async_bg_removes_tau_max():
+    """With Assumption 4 the rate is τ_max-free (Table 1 row 3)."""
+    a = pure_async(C, 1000, tau_c=8, tau_max=10, bounded_grad=True)
+    b = pure_async(C, 1000, tau_c=8, tau_max=10_000, bounded_grad=True)
+    assert a == b
+
+
+def test_waiting_improves_rate():
+    """Alg 3 vs Alg 2: waiting for b shrinks every T-dependent term."""
+    r1 = pure_async(C, 1000, 8, 16)
+    rb = pure_async_waiting(C, 1000, 8, 16, b=8)
+    assert rb < r1
+
+
+def test_fedbuff_improves_with_b():
+    assert fedbuff(C, 1000, 8, b=8) < fedbuff(C, 1000, 8, b=1)
+
+
+def test_shuffled_vs_random_crossover():
+    """Remark 1: shuffled needs fewer iterations iff ζ ≥ √n · √ε."""
+    n = 100
+    assert shuffled_beats_random(zeta=50.0, n=n, eps=1e-2)
+    assert not shuffled_beats_random(zeta=0.1, n=n, eps=1e-2)
+    # the rate comparison mirrors it in the heterogeneity-dominated regime
+    hiz = ProblemConstants(L=1.0, F0=1.0, sigma2=0.0, zeta2=400.0, G=0.1)
+    n, T = 10, 10_000
+    assert shuffled_async(hiz, T, n) < random_async(
+        ProblemConstants(L=1.0, F0=1.0, sigma2=0.0, zeta2=400.0, G=0.1), T, n
+    )
+
+
+def test_rr_matches_best_known_shape():
+    """Prop C.4 = the Mishchenko et al. RR rate: n/T + (√n ζ/T)^{2/3}."""
+    c = ProblemConstants(L=2.0, F0=3.0, sigma2=0.0, zeta2=4.0)
+    n, T = 7, 5000
+    expect = 2.0 * 3.0 * n / T + (2.0 * 3.0 * math.sqrt(n) * 2.0 / T) ** (2 / 3)
+    assert sgd_rr(c, T, n) == pytest.approx(expect)
+
+
+def test_minibatch_linear_speedup_in_b():
+    r1 = minibatch_sgd(C, 1000, b=1)
+    r4 = minibatch_sgd(C, 1000, b=4)
+    assert r4 < r1
+
+
+def test_requires_bounded_gradients():
+    c = ProblemConstants(L=1.0, F0=1.0, sigma2=1.0, zeta2=0.5, G=0.0)
+    with pytest.raises(ValueError):
+        random_async(c, 100, 4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(T=st.integers(10, 10_000))
+def test_tuned_stepsizes_positive_and_bounded(T):
+    g1 = stepsize_pure_async(C, T, 4, 8)
+    g2 = stepsize_random_async(C, T, 4)
+    g3 = stepsize_shuffled_async(C, T, 8)
+    for g in (g1, g2, g3):
+        assert 0 < g <= 1.0 / C.L + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Defs 3–4 estimators vs the closed-form bounds used in the proofs
+# ---------------------------------------------------------------------------
+
+def _prob(n=6, d=4, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return QuadraticProblem(scale * rng.normal(size=(n, d)))
+
+
+def test_sequence_correlation_bound_pure_async():
+    """Prop. C.1: σ²_{k,τ} ≤ τ²ζ² for any realised order."""
+    prob = _prob()
+    n = prob.n
+    s = build_schedule(PureAsync(n), TimingModel(heterogeneous_speeds(n), "fixed"), 120)
+    res = replay(s, prob.grad_fn(), jnp.zeros(prob.d), 0.01, log_every=1)
+    tau = 12
+    xs_chunks = res.xs[::tau]
+    sig = sequence_correlation(s, prob.per_worker_grad_fn(), xs_chunks, tau)
+    zeta = heterogeneity_zeta(prob.per_worker_grad_fn(), jnp.asarray(res.xs[0]), n)
+    # ζ at one point of a quadratic with equal Hessians is x-independent
+    assert np.all(sig <= tau ** 2 * zeta ** 2 + 1e-4)
+
+
+def test_delay_variance_bound_pure_async():
+    """Prop. C.1: ν² ≤ τ_C · τ_max · ζ² · T."""
+    prob = _prob()
+    n = prob.n
+    T = 60
+    s = build_schedule(PureAsync(n), TimingModel(heterogeneous_speeds(n), "fixed"), T)
+    res = replay(s, prob.grad_fn(), jnp.zeros(prob.d), 0.01, log_every=1)
+    nu2 = delay_variance(s, prob.per_worker_grad_fn(), res.xs)
+    zeta = heterogeneity_zeta(prob.per_worker_grad_fn(), jnp.zeros(prob.d), n)
+    assert nu2 <= s.tau_c() * s.tau_max() * zeta ** 2 * T + 1e-4
+
+
+def test_shuffled_lower_sequence_correlation_than_worst_case():
+    """The mechanism behind Alg 6: within an epoch all workers appear once,
+    so partial sums telescope — σ² stays ≤ (n/2)²-ish ζ² instead of τ²ζ²."""
+    prob = _prob(scale=5.0)
+    n = prob.n
+    s = build_schedule(ShuffledAsync(n), TimingModel(np.ones(n), "fixed"), 10 * n)
+    res = replay(s, prob.grad_fn(), jnp.zeros(prob.d), 0.005, log_every=1)
+    tau = n
+    sig = sequence_correlation(s, prob.per_worker_grad_fn(), res.xs[::tau], tau)
+    zeta = heterogeneity_zeta(prob.per_worker_grad_fn(), jnp.zeros(prob.d), n)
+    # bound n·ζ² from §D.3.3 (up to small numerical slack)
+    assert np.mean(sig) <= n * zeta ** 2 + 1e-4
