@@ -1,4 +1,4 @@
-"""Ablations beyond the paper's main figures.
+"""Ablations beyond the paper's main figures — all through ``repro.api``.
 
 1. waiting-b (Alg 3/5): Prop. C.3/D.2 predict the stochastic term shrinks
    as 1/√b — measured on the exact tier across b.
@@ -14,12 +14,9 @@ import csv
 import os
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core import (TimingModel, build_schedule, replay, make_scheduler,
-                        heterogeneous_speeds, delay_adaptive_stepsizes,
-                        round_masks)
+from repro.api import (ExperimentSpec, SimulatorBackend, TrainerBackend,
+                       TrainJob, delay_adaptive)
 from repro.objectives import LogRegProblem, make_synthetic
 
 
@@ -30,16 +27,15 @@ def waiting_b_sweep(T_rounds=600, out="experiments/figs", quick=False):
     prob = LogRegProblem(A, b_, lam=0.1, batch_size=20)
     rows = []
     bs = (1, 2, 4, 8) if not quick else (1, 4)
+    backend = SimulatorBackend()
     for b in bs:
-        sched = make_scheduler("pure_waiting", n, b=b, seed=0)
-        tm = TimingModel(heterogeneous_speeds(n, 6.0), "poisson", seed=0)
-        s = build_schedule(sched, tm, T_rounds * b)
-        res = replay(s, prob.grad_fn(stochastic=True), jnp.zeros(prob.d),
-                     0.01, log_every=max(T_rounds * b // 20, 1),
-                     full_grad_fn=prob.full_grad)
+        res = backend.run(ExperimentSpec(
+            scheduler=f"pure_waiting:b={b}", timing="poisson:slow=6",
+            objective=prob, T=T_rounds * b, stepsize=0.01, stochastic=True,
+            log_every=max(T_rounds * b // 20, 1), seed=0))
         rows.append({"ablation": "waiting_b", "b": b,
                      "final_grad_norm": float(np.mean(res.grad_norms[-3:])),
-                     "tau_max": s.tau_max()})
+                     "tau_max": res.trace["tau_max"]})
     return rows
 
 
@@ -48,26 +44,25 @@ def shuffle_once_vs_reshuffle(T=4000, quick=False):
     A, b_ = make_synthetic(1.0, 1.0, n=n, m=150, d=200, seed=3)
     prob = LogRegProblem(A, b_, lam=0.1)
     rows = []
-    for reshuffle in (True, False):
-        from repro.core.schedulers import ShuffledAsync
-        sched = ShuffledAsync(n, seed=0, reshuffle=reshuffle)
-        tm = TimingModel(heterogeneous_speeds(n, 6.0), "poisson", seed=0)
-        s = build_schedule(sched, tm, T if not quick else T // 4)
-        res = replay(s, prob.grad_fn(), jnp.zeros(prob.d), 0.002,
-                     log_every=200, full_grad_fn=prob.full_grad)
+    backend = SimulatorBackend()
+    for scheduler in ("shuffled", "shuffled:reshuffle=0"):
+        res = backend.run(ExperimentSpec(
+            scheduler=scheduler, timing="poisson:slow=6", objective=prob,
+            T=T if not quick else T // 4, stepsize=0.002, log_every=200,
+            seed=0))
         rows.append({"ablation": "shuffle_once",
-                     "mode": "reshuffle" if reshuffle else "once",
+                     "mode": "reshuffle" if scheduler == "shuffled" else "once",
                      "final_grad_norm": float(np.mean(res.grad_norms[-3:]))})
     return rows
 
 
-def delay_adaptive(T=4000, quick=False):
+def delay_adaptive_ablation(T=4000, quick=False):
     """Heavy straggler: one worker 40× slower.  Delay-adaptive stepsizes
     keep the large-γ convergence without the stale-gradient blowup."""
     n = 8
     A, b_ = make_synthetic(1.0, 1.0, n=n, m=150, d=200, seed=4)
     prob = LogRegProblem(A, b_, lam=0.1)
-    speeds = np.array([1.0] * (n - 1) + [40.0])
+    speeds = tuple([1.0] * (n - 1) + [40.0])
     T = T if not quick else T // 4
     rows = []
     # Measured finding (EXPERIMENTS.md §Claims): in the HETEROGENEOUS regime
@@ -76,17 +71,15 @@ def delay_adaptive(T=4000, quick=False):
     # more than the staleness it prevents.  This *supports* the paper's
     # design: balance contributions (shuffling) instead of suppressing them.
     gamma = 0.05
+    backend = SimulatorBackend()
     for adaptive in (False, True):
-        sched = make_scheduler("pure", n, seed=0)
-        tm = TimingModel(speeds, "fixed", seed=0)
-        s = build_schedule(sched, tm, T)
-        steps = (delay_adaptive_stepsizes(gamma, s.delays, s.tau_c())
-                 if adaptive else gamma)
-        res = replay(s, prob.grad_fn(), jnp.zeros(prob.d), steps,
-                     log_every=50, full_grad_fn=prob.full_grad)
+        res = backend.run(ExperimentSpec(
+            scheduler="pure", timing="fixed", objective=prob, T=T,
+            stepsize=delay_adaptive(gamma) if adaptive else gamma,
+            speeds=speeds, log_every=50, seed=0))
         half = len(res.grad_norms) // 2
         rows.append({"ablation": "delay_adaptive", "adaptive": adaptive,
-                     "gamma": gamma, "tau_max": s.tau_max(),
+                     "gamma": gamma, "tau_max": res.trace["tau_max"],
                      "final_grad_norm": float(np.mean(res.grad_norms[-3:])),
                      "worst_spike": float(np.max(res.grad_norms[half:]))})
     return rows
@@ -95,35 +88,18 @@ def delay_adaptive(T=4000, quick=False):
 def transformer_ordering(steps=30, quick=False):
     """Production tier: shuffled masks beat pure masks on the reduced
     transformer with heterogeneous token data (loss after N rounds)."""
-    from jax.sharding import Mesh
-    from repro.configs import get_arch
-    from repro.data import DataConfig, HeterogeneousTokenPipeline
-    from repro.distributed import AsyncTrainer, AsyncConfig
-    from repro.optim import OptConfig
-
-    cfg = get_arch("qwen2-0.5b").reduced().with_(remat="none")
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
-    n_groups = 4
     steps = steps if not quick else 12
+    n_groups = 4
     rows = []
+    backend = TrainerBackend()
     for alg in ("pure", "shuffled"):
-        tr = AsyncTrainer(cfg, mesh, opt=OptConfig(lr=5e-3),
-                          async_cfg=AsyncConfig(delay_rounds=1))
-        tr.n_groups = n_groups
-        sched = make_scheduler(alg, n_groups, seed=0)
-        tm = TimingModel(heterogeneous_speeds(n_groups, 8.0), "poisson", seed=0)
-        masks = round_masks(build_schedule(sched, tm, steps))
-        pipe = HeterogeneousTokenPipeline(DataConfig(
-            cfg.vocab, 32, 8, n_groups=n_groups, heterogeneity=1.0))
-        state = tr.init_state(jax.random.PRNGKey(0))
-        step_fn = jax.jit(tr.train_step_fn())
-        losses = []
-        for q in range(masks.shape[0]):
-            batch = {k: jnp.asarray(v) for k, v in pipe.batch(q).items()}
-            state, m = step_fn(state, batch, jnp.asarray(masks[q]))
-            losses.append(float(m["loss"]))
+        res = backend.run(ExperimentSpec(
+            scheduler=alg, timing="poisson:slow=8",
+            objective=TrainJob(arch="qwen2-0.5b", global_batch=8, seq_len=32,
+                               heterogeneity=1.0, delay_rounds=1),
+            T=steps, n_workers=n_groups, stepsize=5e-3, seed=0))
         rows.append({"ablation": "transformer_ordering", "alg": alg,
-                     "final_loss": float(np.mean(losses[-5:]))})
+                     "final_loss": float(np.mean(res.losses[-5:]))})
     return rows
 
 
@@ -132,7 +108,7 @@ def run(out="experiments/figs", quick=False):
     rows = []
     rows += waiting_b_sweep(quick=quick)
     rows += shuffle_once_vs_reshuffle(quick=quick)
-    rows += delay_adaptive(quick=quick)
+    rows += delay_adaptive_ablation(quick=quick)
     rows += transformer_ordering(quick=quick)
     with open(os.path.join(out, "ablations.csv"), "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=sorted({k for r in rows for k in r}))

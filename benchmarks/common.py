@@ -1,13 +1,14 @@
-"""Shared helpers for the paper-experiment benchmarks (§5 / App. A)."""
+"""Shared helpers for the paper-experiment benchmarks (§5 / App. A).
+
+All figure benchmarks run through ``repro.api``: one ``ExperimentSpec`` per
+(algorithm, pattern) cell with a grid stepsize policy.  The simulator
+backend replays the whole γ-grid against ONE shared schedule in a single
+batched scan — the schedule is gradient-value-independent, so the old
+rebuild-per-γ Python loop did ``len(grid)×`` redundant work.
+"""
 from __future__ import annotations
 
-import time
-
-import numpy as np
-import jax.numpy as jnp
-
-from repro.core import (TimingModel, build_schedule, replay, make_scheduler,
-                        heterogeneous_speeds)
+from repro.api import ExperimentSpec, SimulatorBackend, grid
 from repro.objectives import LogRegProblem
 
 # the paper's stepsize grid (App. A.1)
@@ -21,21 +22,15 @@ def run_alg(prob: LogRegProblem, alg: str, pattern: str, T: int,
             slow_factor: float = 8.0, log_every: int = 100):
     """Grid-search the stepsize (paper protocol: best final grad norm with
     small fluctuations) and return (best_gamma, ts, grad_norms, seconds)."""
-    n = prob.n
-    best = None
-    t0 = time.time()
-    for gamma in stepsizes:
-        sched = make_scheduler(alg, n, seed=seed)
-        tm = TimingModel(heterogeneous_speeds(n, slow_factor), pattern,
-                         seed=seed)
-        s = build_schedule(sched, tm, T)
-        res = replay(s, prob.grad_fn(stochastic=stochastic),
-                     jnp.zeros(prob.d), gamma, log_every=log_every,
-                     full_grad_fn=prob.full_grad)
-        tail = float(np.mean(res.grad_norms[-3:]))
-        fluct = float(np.std(res.grad_norms[-5:]))
-        score = tail + 0.5 * fluct
-        if best is None or score < best[0]:
-            best = (score, gamma, res.log_ts, res.grad_norms)
-    _, gamma, ts, gns = best
-    return gamma, ts, gns, time.time() - t0
+    spec = ExperimentSpec(
+        scheduler=alg,
+        timing=f"{pattern}:slow={slow_factor}",
+        objective=prob,
+        T=T,
+        stepsize=grid(*stepsizes),
+        stochastic=stochastic,
+        log_every=log_every,
+        seed=seed,
+    )
+    res = SimulatorBackend().run(spec)
+    return res.gamma, res.log_ts, res.grad_norms, res.seconds

@@ -1,10 +1,10 @@
 """Table 1: empirical schedules vs the theory quantities the proofs bound.
 
-For each algorithm we (a) realise a schedule, (b) measure τ_C/τ_max/τ_avg
-and the Defs-3/4 quantities ν², σ²_{k,τ} on a quadratic oracle, (c) check
-them against the closed-form bounds used in the special-case proofs
-(Props. C.1/C.2/C.4, D.1/D.3), and (d) evaluate the Table-1 rate value at
-the realised constants.
+For each algorithm we (a) run the spec through the simulator backend
+(``repro.api``), (b) measure τ_C/τ_max/τ_avg and the Defs-3/4 quantities
+ν², σ²_{k,τ} on a quadratic oracle, (c) check them against the closed-form
+bounds used in the special-case proofs (Props. C.1/C.2/C.4, D.1/D.3), and
+(d) evaluate the Table-1 rate value at the realised constants.
 """
 from __future__ import annotations
 
@@ -14,8 +14,7 @@ import os
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (TimingModel, build_schedule, replay, make_scheduler,
-                        heterogeneous_speeds)
+from repro.api import ExperimentSpec, SimulatorBackend
 from repro.core.theory import ProblemConstants, RATES
 from repro.core.trace import (sequence_correlation, delay_variance,
                               heterogeneity_zeta)
@@ -34,12 +33,16 @@ def run(out: str = "experiments/figs", T: int = 96, n: int = 8, quick=False):
             "minibatch", "rr"]
     if quick:
         algs = ["pure", "shuffled", "rr"]
+    backend = SimulatorBackend()
     for alg in algs:
         b = 4 if alg in ("pure_waiting", "fedbuff", "minibatch") else 1
-        sched = make_scheduler(alg, n, b=b, seed=0)
-        tm = TimingModel(heterogeneous_speeds(n, 4.0), "poisson", seed=0)
-        s = build_schedule(sched, tm, T)
-        res = replay(s, prob.grad_fn(), jnp.zeros(6), 0.02, log_every=1)
+        spec = ExperimentSpec(
+            scheduler=f"{alg}:b={b}" if b > 1 else alg,
+            timing="poisson:slow=4",
+            objective=prob, T=T, n_workers=n,
+            stepsize=0.02, log_every=1, seed=0)
+        res = backend.run(spec)
+        s = res.schedule
         tau = max(n, 8)
         sig = sequence_correlation(s, prob.per_worker_grad_fn(),
                                    res.xs[::tau], tau)
@@ -63,7 +66,7 @@ def run(out: str = "experiments/figs", T: int = 96, n: int = 8, quick=False):
             rate = rate_fn(c, T, b=b)
         rows.append({
             "alg": alg, "b": b, "tau_c": tc, "tau_max": tmax,
-            "tau_avg": round(s.tau_avg(), 2),
+            "tau_avg": res.trace["tau_avg"],
             "sigma2_mean": float(np.mean(sig)),
             "sigma2_bound": sigma_bound,
             "sigma2_ok": bool(np.all(sig <= sigma_bound + 1e-6)),

@@ -1,19 +1,12 @@
 """Batched serving example: prefill a batch of prompts, then decode with the
-ring-buffer KV cache through the Server driver.
+ring-buffer KV cache through ``repro.api``'s serve backend (which drives the
+Server's sharded, cache-donating jitted step).
 
   PYTHONPATH=src python examples/serve_batched.py [--arch qwen2-0.5b]
 """
 import argparse
-import time
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh
-
-from repro.configs import get_arch
-from repro.distributed import Server, ServeConfig
-from repro.models import init_params, prefill, decode_step
+from repro.api import ExperimentSpec, ServeJob, ServeBackend
 
 
 def main():
@@ -24,33 +17,15 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
 
-    cfg = get_arch(args.arch).reduced().with_(remat="none")
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
-    ctx = args.prompt_len + args.gen
-    server = Server(cfg, mesh, ServeConfig(batch=args.batch, ctx_len=ctx,
-                                           temperature=0.8))
-
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
-    t0 = time.time()
-    last, cache = prefill(cfg, params, {"tokens": jnp.asarray(prompts)},
-                          ctx_len=ctx)
-    print(f"prefill {args.batch}x{args.prompt_len} in {time.time()-t0:.2f}s")
-
-    # continue decoding from the prefilled cache
-    step = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q, ctx))
-    toks = jnp.argmax(last, axis=-1).astype(jnp.int32)
-    out = [np.asarray(toks)]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = step(params, cache, toks, jnp.int32(args.prompt_len + i))
-        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(np.asarray(toks))
-    dt = time.time() - t0
-    gen = np.stack(out, axis=1)
-    print(f"decoded {gen.shape} in {dt:.2f}s "
-          f"({args.batch*(args.gen-1)/max(dt,1e-9):.1f} tok/s)")
+    spec = ExperimentSpec(
+        objective=ServeJob(arch=args.arch, batch=args.batch,
+                           prompt_len=args.prompt_len, temperature=0.8),
+        T=args.gen, seed=0)
+    res = ServeBackend().run(spec)
+    gen = res.x
+    print(f"decoded {gen.shape} in {res.extra['decode_seconds']:.2f}s "
+          f"({res.extra['tok_per_s']:.1f} tok/s, total {res.seconds:.2f}s "
+          f"incl. prefill)")
     print("sample:", gen[0][:12])
 
 

@@ -1,6 +1,9 @@
 """End-to-end driver: train a ~100M-parameter qwen2-family model with the
 AsGrad async trainer on heterogeneous data for a few hundred steps.
 
+One ``ExperimentSpec`` + ``TrainJob`` through ``repro.api``'s trainer
+backend — the same spec vocabulary as the theory-tier simulator.
+
 Presets:
   --preset smoke   tiny model, 20 steps   (runs anywhere, CI-sized)
   --preset 100m    ~100M params, 300 steps (the deliverable run; sized for a
@@ -10,33 +13,27 @@ Presets:
       --scheduler shuffled --pattern poisson
 """
 import argparse
-import time
+import dataclasses
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh
-
-from repro.configs import get_arch
-from repro.core import TimingModel, build_schedule, round_masks, \
-    make_scheduler, heterogeneous_speeds
-from repro.data import DataConfig, HeterogeneousTokenPipeline
-from repro.distributed import AsyncTrainer, AsyncConfig
-from repro.optim import OptConfig
+from repro.api import ExperimentSpec, TrainJob, TrainerBackend
 from repro import checkpoint
 
 
-def build(preset: str):
-    base = get_arch("qwen2-0.5b")
+def build_job(preset: str):
     if preset == "smoke":
-        cfg = base.reduced().with_(remat="none")
-        steps, B, S, n_groups = 20, 8, 64, 4
+        job = TrainJob(arch="qwen2-0.5b", reduced=True, remat="none",
+                       global_batch=8, seq_len=64)
+        steps, n_groups = 20, 4
     else:  # ~100M active params
-        cfg = base.with_(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
-                         d_head=64, d_ff=2048, vocab=32768,
-                         tie_embeddings=True)
-        steps, B, S, n_groups = 300, 32, 512, 8
-    return cfg, steps, B, S, n_groups
+        job = TrainJob(
+            arch="qwen2-0.5b", reduced=False, remat=None,
+            arch_overrides=(("n_layers", 12), ("d_model", 768),
+                            ("n_heads", 12), ("n_kv_heads", 4),
+                            ("d_head", 64), ("d_ff", 2048),
+                            ("vocab", 32768), ("tie_embeddings", True)),
+            global_batch=32, seq_len=512)
+        steps, n_groups = 300, 8
+    return job, steps, n_groups
 
 
 def main():
@@ -51,40 +48,32 @@ def main():
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
-    cfg, steps, B, S, n_groups = build(args.preset)
+    job, steps, n_groups = build_job(args.preset)
+    if args.sync:
+        job = dataclasses.replace(job, delay_rounds=0)
+    spec = ExperimentSpec(
+        scheduler=f"{args.scheduler}:b={max(n_groups // 2, 1)}"
+        if args.scheduler == "fedbuff" else args.scheduler,
+        timing=f"{args.pattern}:slow=6",
+        objective=job, T=steps, n_workers=n_groups,
+        stepsize=args.lr, seed=0)
+
+    cfg = job.make_arch()
     from repro.models import n_params
     print(f"arch={cfg.name}-derived  params={n_params(cfg)/1e6:.1f}M  "
-          f"steps={steps}  batch={B}x{S}  groups={n_groups}")
+          f"steps={steps}  batch={job.global_batch}x{job.seq_len}  "
+          f"groups={n_groups}")
 
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
-    tr = AsyncTrainer(cfg, mesh, opt=OptConfig(lr=args.lr, clip_norm=1.0),
-                      async_cfg=AsyncConfig(
-                          delay_rounds=0 if args.sync else 1))
-    tr.n_groups = n_groups
-
-    sched = make_scheduler(args.scheduler, n_groups,
-                           b=max(n_groups // 2, 1), seed=0)
-    tm = TimingModel(heterogeneous_speeds(n_groups, 6.0), args.pattern, seed=0)
-    schedule = build_schedule(sched, tm, steps * sched.wait_b)
-    masks = round_masks(schedule)
-
-    pipe = HeterogeneousTokenPipeline(DataConfig(
-        vocab=cfg.vocab, seq_len=S, global_batch=B, n_groups=n_groups,
-        heterogeneity=1.0))
-    state = tr.init_state(jax.random.PRNGKey(0))
-    step = jax.jit(tr.train_step_fn())
-
-    t0 = time.time()
-    for i in range(min(steps, masks.shape[0])):
-        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
-        state, m = step(state, batch, jnp.asarray(masks[i]))
+    def on_step(i, state, m):
         if i % max(steps // 10, 1) == 0 or i == steps - 1:
-            print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
-                  f"|g|={float(m['grad_norm']):.3f}  "
-                  f"part={float(m['participation']):.2f}  "
-                  f"{(time.time()-t0):.1f}s")
+            print(f"step {i:4d}  loss={m['loss']:.4f}  "
+                  f"|g|={m['grad_norm']:.3f}  part={m['participation']:.2f}")
+
+    res = TrainerBackend(on_step=on_step).run(spec)
+    print(f"done in {res.seconds:.1f}s  final loss={res.losses[-1]:.4f}  "
+          f"tau_max={res.trace['tau_max']}")
     if args.ckpt:
-        checkpoint.save(args.ckpt, state, step=steps, meta={"arch": cfg.name})
+        checkpoint.save(args.ckpt, res.x, step=steps, meta={"arch": cfg.name})
         print("checkpoint saved to", args.ckpt)
 
 

@@ -1,0 +1,53 @@
+"""`repro.api` — one spec, three backends (simulator · trainer · serve).
+
+AsGrad's unifying view (PAPER.md §3.1) is that pure/random/shuffled/FedBuff
+asynchronous SGD are ONE algorithm: SGD with an arbitrary data ordering plus
+delays,
+
+    x_{t+1} = x_t − γ̃ · g_{i_t}(x_{π_t}),        γ̃ = γ / b.
+
+This package makes "run an AsGrad experiment" a one-liner against any
+execution tier::
+
+    from repro.api import ExperimentSpec, run
+    res = run(ExperimentSpec(scheduler="shuffled", timing="poisson:slow=8",
+                             objective=prob, T=4000, stepsize=0.002))
+
+Spec field → paper notation:
+
+====================  ====================================================
+``scheduler``         the job-assignment policy: which worker i_t serves
+                      update t, and at which iterate π_t its job was
+                      assigned (``"pure"``, ``"random"``, ``"shuffled"``,
+                      ``"fedbuff:b=4"``, … over ``repro.core.REGISTRY``);
+                      ``b`` is the waiting parameter (one server update per
+                      b received gradients, Alg 3/5)
+``timing``            worker compute-time law; together with the scheduler
+                      it realises the delays τ_t = t − π_t and the
+                      concurrency τ_C (Defs 1–2)
+``T``                 horizon: number of received gradients (simulator),
+                      server rounds (trainer), or decode steps (serve)
+``stepsize``          the server stepsize γ — constant, grid-searched
+                      (one shared schedule, single batched scan), or
+                      delay-adaptive γ_t = γ·min(1, τ_C/(τ_t+1))
+``objective``         the local functions f_i (problem object), a
+                      ``TrainJob`` (pod-scale trainer), or a ``ServeJob``
+``stochastic``        sample mini-batch gradients (Assumption 2) instead
+                      of full local gradients ∇f_i
+====================  ====================================================
+
+Backends return a unified :class:`RunResult` (final iterate/params,
+grad-norm & loss curves, realised τ_max/τ_avg/τ_C, wall-time).
+"""
+from .spec import (ExperimentSpec, StepsizePolicy, TrainJob, ServeJob,
+                   constant, grid, delay_adaptive, parse_compact)
+from .result import RunResult
+from .backends import (Backend, SimulatorBackend, TrainerBackend,
+                       ServeBackend, run)
+
+__all__ = [
+    "ExperimentSpec", "StepsizePolicy", "TrainJob", "ServeJob",
+    "constant", "grid", "delay_adaptive", "parse_compact",
+    "RunResult",
+    "Backend", "SimulatorBackend", "TrainerBackend", "ServeBackend", "run",
+]

@@ -1,0 +1,271 @@
+"""The three ways to execute an :class:`ExperimentSpec`.
+
+* :class:`SimulatorBackend` — schedule + exact jittable replay (theory tier).
+  Grid stepsize policies replay every γ against ONE shared schedule in a
+  single batched scan (:func:`repro.core.simulator.replay_grid`): the
+  schedule is gradient-value-independent, so rebuilding it per γ — what the
+  benchmarks used to do — is pure waste.
+* :class:`TrainerBackend` — schedule → participation ``round_masks`` →
+  ``AsyncTrainer`` pjit loop (production tier).  Same schedulers, identical
+  ordering by construction.
+* :class:`ServeBackend` — batched decoding through ``distributed.Server``.
+
+All three return a :class:`RunResult`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from ..core import (delay_adaptive_stepsizes, replay, replay_grid,
+                    round_masks)
+from ..core.trace import summarize
+from .result import RunResult
+from .spec import ExperimentSpec, ServeJob, StepsizePolicy, TrainJob
+
+
+@runtime_checkable
+class Backend(Protocol):
+    name: str
+
+    def run(self, spec: ExperimentSpec) -> RunResult: ...
+
+
+def _grid_score(grad_norms: np.ndarray) -> float:
+    """The paper's selection protocol (App. A.1): best final grad norm with
+    small fluctuations — tail mean plus half the tail standard deviation."""
+    tail = float(np.mean(grad_norms[-3:]))
+    fluct = float(np.std(grad_norms[-5:]))
+    return tail + 0.5 * fluct
+
+
+class SimulatorBackend:
+    """Exact replay of Algorithm 1: x_{t+1} = x_t − γ̃ g_{i_t}(x_{π_t})."""
+
+    name = "simulator"
+
+    def run(self, spec: ExperimentSpec) -> RunResult:
+        prob = spec.objective
+        if prob is None or not hasattr(prob, "grad_fn"):
+            raise TypeError(
+                "SimulatorBackend needs an objective exposing grad_fn "
+                f"(got {type(prob).__name__})")
+        t0 = time.time()
+        schedule = spec.build_schedule()
+        grad_fn = prob.grad_fn(stochastic=spec.stochastic)
+        full_grad = getattr(prob, "full_grad", None)
+        loss = getattr(prob, "loss", None)
+        x0 = np.zeros(prob.d, dtype=np.float32)
+        policy: StepsizePolicy = spec.stepsize
+        kw = dict(key=jax.random.PRNGKey(spec.seed), clip=spec.clip,
+                  log_every=spec.log_every, full_grad_fn=full_grad,
+                  loss_fn=loss)
+
+        if policy.kind == "grid":
+            if full_grad is None:
+                raise ValueError(
+                    "grid stepsize selection scores grad norms; the "
+                    "objective must expose full_grad")
+            results = replay_grid(schedule, grad_fn, x0, policy.gammas, **kw)
+            best_i, best_score = 0, None
+            grid_info = {}
+            for i, (g, res) in enumerate(zip(policy.gammas, results)):
+                score = _grid_score(res.grad_norms)
+                grid_info[g] = {"grad_norms": res.grad_norms,
+                                "losses": res.losses, "score": score}
+                if best_score is None or score < best_score:
+                    best_i, best_score = i, score
+            gamma, res = policy.gammas[best_i], results[best_i]
+        else:
+            gamma = policy.gamma
+            if policy.kind == "delay_adaptive":
+                steps = delay_adaptive_stepsizes(gamma, schedule.delays,
+                                                 schedule.tau_c())
+            else:
+                steps = gamma
+            res = replay(schedule, grad_fn, x0, steps, **kw)
+            grid_info = None
+
+        return RunResult(
+            spec=spec, backend=self.name, x=res.x, xs=res.xs,
+            log_ts=res.log_ts, grad_norms=res.grad_norms, losses=res.losses,
+            gamma=gamma, grid=grid_info, schedule=schedule,
+            trace=summarize(schedule), seconds=time.time() - t0)
+
+
+class TrainerBackend:
+    """Schedule → round participation masks → ``AsyncTrainer`` pjit loop.
+
+    ``mesh``/``rules`` default to this host's devices and the repo sharding
+    rules; ``on_step(i, state, metrics)`` is invoked once per round (for
+    logging / checkpointing without owning the loop).
+    """
+
+    name = "trainer"
+
+    def __init__(self, mesh=None, rules=None,
+                 on_step: Optional[Callable] = None):
+        self.mesh = mesh
+        self.rules = rules
+        self.on_step = on_step
+
+    # ---- pieces shared with tests -----------------------------------------
+    @staticmethod
+    def masks_for(spec: ExperimentSpec, n_groups: Optional[int] = None):
+        """((rounds, n_groups) participation masks, realised Schedule) for
+        ``spec.T`` rounds."""
+        sched = spec.make_scheduler(n_groups)
+        schedule = spec.build_schedule(T=spec.T * sched.wait_b, n=n_groups)
+        return round_masks(schedule), schedule
+
+    def _make_batch_fn(self, cfg, job: TrainJob, n_groups: int, seed: int):
+        import jax
+        import jax.numpy as jnp
+        from ..data import DataConfig, HeterogeneousTokenPipeline
+        from ..models import batch_specs
+
+        pipe = HeterogeneousTokenPipeline(DataConfig(
+            vocab=cfg.vocab, seq_len=job.seq_len,
+            global_batch=job.global_batch, n_groups=n_groups,
+            heterogeneity=job.heterogeneity, seed=seed))
+        specs = batch_specs(cfg, job.global_batch, job.seq_len)
+
+        def make_batch(i):
+            b = {"tokens": jnp.asarray(pipe.batch(i)["tokens"])}
+            for k, sp in specs.items():
+                if k != "tokens" and sp.dtype != "int32":  # stubbed modalities
+                    b[k] = jax.random.normal(jax.random.PRNGKey(i), sp.shape,
+                                             jnp.float32)
+                elif k == "tokens":
+                    b[k] = b[k][:, :sp.shape[1]]
+            return b
+
+        return make_batch
+
+    def run(self, spec: ExperimentSpec) -> RunResult:
+        job = spec.objective
+        if not isinstance(job, TrainJob):
+            raise TypeError("TrainerBackend needs a TrainJob objective")
+        policy: StepsizePolicy = spec.stepsize
+        if policy.kind == "grid":
+            best = None
+            for g in policy.gammas:
+                res = self._run_single(spec, job, g, adaptive=False)
+                score = float(np.mean(res.losses[-3:]))
+                if best is None or score < best[0]:
+                    best = (score, res)
+            return best[1]
+        return self._run_single(spec, job, policy.gamma,
+                                adaptive=policy.kind == "delay_adaptive")
+
+    def _run_single(self, spec: ExperimentSpec, job: TrainJob, lr: float,
+                    adaptive: bool) -> RunResult:
+        import jax
+        import jax.numpy as jnp
+        from ..distributed import AsyncTrainer, AsyncConfig, DEFAULT_RULES
+        from ..launch.mesh import make_host_mesh
+        from ..optim import OptConfig
+
+        t0 = time.time()
+        cfg = job.make_arch()
+        mesh = self.mesh if self.mesh is not None else make_host_mesh()
+        rules = self.rules if self.rules is not None else DEFAULT_RULES
+        tr = AsyncTrainer(
+            cfg, mesh,
+            opt=OptConfig(name=job.opt, lr=lr, clip_norm=job.clip_norm),
+            async_cfg=AsyncConfig(delay_rounds=job.delay_rounds,
+                                  delay_adaptive=adaptive,
+                                  microbatches=job.microbatches),
+            rules=rules)
+        n_groups = spec.n_workers or tr.n_groups
+        tr.n_groups = n_groups
+        if job.global_batch % n_groups:
+            raise ValueError(
+                f"the {n_groups} worker groups must divide "
+                f"global_batch={job.global_batch}")
+
+        masks, schedule = self.masks_for(spec, n_groups)
+        make_batch = self._make_batch_fn(cfg, job, n_groups, spec.seed)
+        state = tr.init_state(jax.random.PRNGKey(spec.seed))
+        step = jax.jit(tr.train_step_fn())
+
+        rounds = min(spec.T, masks.shape[0])
+        losses, grad_norms, metrics_rows = [], [], []
+        for i in range(rounds):
+            state, m = step(state, make_batch(i), jnp.asarray(masks[i]))
+            m = {k: float(v) for k, v in m.items()}
+            losses.append(m["loss"])
+            grad_norms.append(m["grad_norm"])
+            metrics_rows.append(m)
+            if self.on_step is not None:
+                self.on_step(i, state, m)
+
+        return RunResult(
+            spec=spec, backend=self.name, x=state,
+            log_ts=np.arange(rounds), losses=np.asarray(losses),
+            grad_norms=np.asarray(grad_norms), gamma=lr,
+            schedule=schedule, trace=summarize(schedule),
+            seconds=time.time() - t0,
+            extra={"metrics": metrics_rows, "masks": masks,
+                   "arch": cfg.name, "n_groups": n_groups})
+
+
+class ServeBackend:
+    """Prefill + batched decode through the sharded ``Server`` driver."""
+
+    name = "serve"
+
+    def __init__(self, mesh=None, rules=None):
+        self.mesh = mesh
+        self.rules = rules
+
+    def run(self, spec: ExperimentSpec) -> RunResult:
+        import jax
+        import jax.numpy as jnp
+        from ..distributed import Server, ServeConfig
+        from ..distributed.sharding import DEFAULT_RULES
+        from ..launch.mesh import make_host_mesh
+        from ..models import init_params, prefill
+
+        job = spec.objective
+        if not isinstance(job, ServeJob):
+            raise TypeError("ServeBackend needs a ServeJob objective")
+        t0 = time.time()
+        cfg = job.make_arch()
+        mesh = self.mesh if self.mesh is not None else make_host_mesh()
+        rules = self.rules if self.rules is not None else DEFAULT_RULES
+        ctx = job.prompt_len + spec.T
+        server = Server(cfg, mesh, ServeConfig(batch=job.batch, ctx_len=ctx,
+                                               temperature=job.temperature,
+                                               seed=spec.seed), rules=rules)
+        params = init_params(cfg, jax.random.PRNGKey(spec.seed))
+        prompts = np.random.default_rng(spec.seed).integers(
+            0, cfg.vocab, (job.batch, job.prompt_len)).astype(np.int32)
+        last, cache = prefill(cfg, params, {"tokens": jnp.asarray(prompts)},
+                              ctx_len=ctx)
+        toks = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        t_dec = time.time()
+        gen = server.generate(params, np.asarray(toks), spec.T - 1,
+                              start_pos=job.prompt_len, cache=cache)
+        gen = np.concatenate([np.asarray(toks)[:, None], gen], axis=1)
+        dt = time.time() - t_dec
+        return RunResult(
+            spec=spec, backend=self.name, x=gen, seconds=time.time() - t0,
+            extra={"prompts": prompts, "arch": cfg.name,
+                   "decode_seconds": dt,
+                   "tok_per_s": job.batch * (spec.T - 1) / max(dt, 1e-9)})
+
+
+def run(spec: ExperimentSpec, backend: Optional[Backend] = None) -> RunResult:
+    """Execute a spec on the right backend (dispatched on the objective)."""
+    if backend is None:
+        if isinstance(spec.objective, TrainJob):
+            backend = TrainerBackend()
+        elif isinstance(spec.objective, ServeJob):
+            backend = ServeBackend()
+        else:
+            backend = SimulatorBackend()
+    return backend.run(spec)

@@ -1,0 +1,45 @@
+"""Unified result type returned by every backend."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RunResult:
+    """What an AsGrad run produced, backend-independent.
+
+    ``x`` is the final iterate (simulator), the final train state tree
+    (trainer), or the generated tokens (serve).  ``trace`` carries the
+    realised-schedule statistics the theory bounds reference (τ_max, τ_avg,
+    τ_C, job balance); ``grid`` holds the per-γ curves when a stepsize grid
+    search ran.
+    """
+
+    spec: Any
+    backend: str
+    x: Any = None
+    log_ts: Optional[np.ndarray] = None
+    grad_norms: Optional[np.ndarray] = None
+    losses: Optional[np.ndarray] = None
+    xs: Optional[np.ndarray] = None          # iterate snapshots (simulator)
+    gamma: Optional[float] = None            # the (selected) server stepsize
+    grid: Optional[dict] = None              # γ → {"grad_norms", "losses", "score"}
+    schedule: Any = None                     # realised Schedule, if one was built
+    trace: dict = dataclasses.field(default_factory=dict)
+    seconds: float = 0.0
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_grad_norm(self) -> Optional[float]:
+        if self.grad_norms is None or not len(self.grad_norms):
+            return None
+        return float(self.grad_norms[-1])
+
+    @property
+    def final_loss(self) -> Optional[float]:
+        if self.losses is None or not len(self.losses):
+            return None
+        return float(self.losses[-1])

@@ -1,0 +1,239 @@
+"""Declarative experiment specs: one frozen dataclass per AsGrad run.
+
+Compact spec strings keep configs one-line:
+
+* scheduler — ``"name[:k=v,...]"`` over :data:`repro.core.REGISTRY`, e.g.
+  ``"pure"``, ``"fedbuff:b=4"``, ``"shuffled:reshuffle=0"``.
+* timing — ``"pattern[:k=v,...]"`` over :data:`repro.core.PATTERNS`, e.g.
+  ``"poisson:slow=8"`` (workers linearly spread over [1, slow] compute time).
+* stepsize — a float (constant γ), a sequence (grid-searched γ), a
+  :class:`StepsizePolicy`, or a string ``"constant:0.01"`` /
+  ``"grid:0.005,0.002"`` / ``"delay_adaptive:0.05"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from ..core import (TimingModel, build_schedule, heterogeneous_speeds,
+                    make_scheduler)
+from ..core.engine import Schedule
+from ..core.schedulers import REGISTRY
+
+
+def _parse_kv(text: str) -> dict:
+    """``"b=4,reshuffle=0"`` → ``{"b": 4, "reshuffle": 0}`` (numbers coerced)."""
+    out: dict[str, Any] = {}
+    if not text:
+        return out
+    for item in text.split(","):
+        if "=" not in item:
+            raise ValueError(f"malformed spec option {item!r} (want key=value)")
+        k, v = item.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def parse_compact(spec: str) -> tuple[str, dict]:
+    """``"name:k=v,k=v"`` → ``(name, kwargs)``."""
+    name, _, rest = spec.partition(":")
+    return name, _parse_kv(rest)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepsizePolicy:
+    """How the server stepsize γ is chosen.
+
+    * ``constant`` — one replay at ``gammas[0]``.
+    * ``grid`` — all of ``gammas`` replayed against one shared schedule (a
+      single batched scan on the simulator backend); the paper's selection
+      protocol (best tail grad-norm with small fluctuations) picks a winner.
+    * ``delay_adaptive`` — γ_t = γ·min(1, τ_C/(τ_t+1)), the [Koloskova et
+      al. 22]-style stepsize that removes the τ_max dependence (Table 1
+      note b).
+    """
+
+    kind: str = "constant"          # constant | grid | delay_adaptive
+    gammas: tuple = (0.01,)
+
+    KINDS = ("constant", "grid", "delay_adaptive")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown stepsize kind {self.kind!r}")
+        object.__setattr__(self, "gammas",
+                           tuple(float(g) for g in self.gammas))
+        if not self.gammas:
+            raise ValueError("stepsize policy needs at least one gamma")
+
+    @property
+    def gamma(self) -> float:
+        return self.gammas[0]
+
+    @classmethod
+    def coerce(cls, value) -> "StepsizePolicy":
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            kind, _, rest = value.partition(":")
+            gammas = tuple(float(g) for g in rest.split(",") if g)
+            return cls(kind, gammas or (0.01,))
+        if isinstance(value, (int, float)):
+            return cls("constant", (float(value),))
+        if isinstance(value, (tuple, list, np.ndarray)):
+            return cls("grid", tuple(float(g) for g in value))
+        raise TypeError(f"cannot coerce {value!r} to a StepsizePolicy")
+
+
+def constant(gamma: float) -> StepsizePolicy:
+    return StepsizePolicy("constant", (gamma,))
+
+
+def grid(*gammas: float) -> StepsizePolicy:
+    return StepsizePolicy("grid", tuple(gammas))
+
+
+def delay_adaptive(gamma: float) -> StepsizePolicy:
+    return StepsizePolicy("delay_adaptive", (gamma,))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainJob:
+    """Objective for the trainer backend: arch + data for ``AsyncTrainer``.
+
+    ``ExperimentSpec.T`` counts server *rounds* here (one aggregated model
+    update per round); the schedule realises ``T·wait_b`` gradient receipts.
+    """
+
+    arch: str = "qwen2-0.5b"
+    reduced: bool = True
+    remat: Optional[str] = "none"
+    arch_overrides: tuple = ()          # ((field, value), ...)
+    global_batch: int = 8
+    seq_len: int = 64
+    heterogeneity: float = 1.0
+    delay_rounds: int = 1               # 0 = synchronous baseline
+    microbatches: int = 1
+    opt: str = "adam"
+    clip_norm: Optional[float] = 1.0
+
+    def make_arch(self):
+        from ..configs import get_arch
+        cfg = get_arch(self.arch)
+        if self.reduced:
+            cfg = cfg.reduced()
+        if self.remat is not None:
+            cfg = cfg.with_(remat=self.remat)
+        if self.arch_overrides:
+            cfg = cfg.with_(**dict(self.arch_overrides))
+        return cfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeJob:
+    """Objective for the serve backend: batched greedy/temperature decoding.
+
+    ``ExperimentSpec.T`` counts decode steps; scheduler/timing fields are
+    unused (serving has no job-assignment policy).
+    """
+
+    arch: str = "qwen2-0.5b"
+    reduced: bool = True
+    batch: int = 4
+    prompt_len: int = 12
+    temperature: float = 0.0
+
+    def make_arch(self):
+        from ..configs import get_arch
+        cfg = get_arch(self.arch)
+        if self.reduced:
+            cfg = cfg.reduced().with_(remat="none")
+        return cfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One AsGrad experiment, declaratively.
+
+    Field → paper notation (Algorithm 1):
+
+    * ``scheduler`` — the job-assignment policy producing the ordering
+      (i_t, π_t); ``wait_b`` variants update once per b received gradients.
+    * ``timing`` — worker compute-time distribution; with the scheduler it
+      fully determines the realised delays τ_t = t − π_t.
+    * ``T`` — horizon: gradient receipts on the simulator backend, server
+      rounds on the trainer backend, decode steps on the serve backend.
+    * ``stepsize`` — the server stepsize γ (policy, see
+      :class:`StepsizePolicy`); waiting variants apply γ/b per gradient.
+    * ``objective`` — the functions f_i: a problem object exposing
+      ``grad_fn``/``full_grad`` (simulator), a :class:`TrainJob` (trainer),
+      or a :class:`ServeJob` (serve).
+    """
+
+    scheduler: str = "pure"
+    timing: str = "fixed:slow=5"
+    objective: Any = None
+    T: int = 1000
+    n_workers: Optional[int] = None     # default: objective.n
+    stepsize: Any = 0.01                # coerced to StepsizePolicy
+    stochastic: bool = False
+    clip: Optional[float] = None
+    log_every: int = 100
+    speeds: Optional[tuple] = None      # explicit per-worker speeds override
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "stepsize",
+                           StepsizePolicy.coerce(self.stepsize))
+        if self.speeds is not None:
+            object.__setattr__(self, "speeds",
+                               tuple(float(s) for s in self.speeds))
+        name, _ = parse_compact(self.scheduler)
+        if name not in REGISTRY:
+            raise ValueError(
+                f"unknown scheduler {name!r}; want one of {sorted(REGISTRY)}")
+
+    # ---- resolved pieces ---------------------------------------------------
+    @property
+    def n(self) -> int:
+        if self.n_workers is not None:
+            return int(self.n_workers)
+        n = getattr(self.objective, "n", None)
+        if n is None:
+            raise ValueError(
+                "n_workers not set and objective does not define .n")
+        return int(n)
+
+    def make_scheduler(self, n: Optional[int] = None):
+        name, kw = parse_compact(self.scheduler)
+        b = int(kw.pop("b", 1))
+        return make_scheduler(name, n or self.n, b=b, seed=self.seed, **kw)
+
+    def make_timing(self, n: Optional[int] = None) -> TimingModel:
+        pattern, kw = parse_compact(self.timing)
+        n = n or self.n
+        slow = float(kw.pop("slow", 5.0))
+        base = float(kw.pop("base", 1.0))
+        if kw:
+            raise ValueError(f"unknown timing options {sorted(kw)}")
+        if self.speeds is not None:    # explicit profile overrides slow/base
+            if len(self.speeds) != n:
+                raise ValueError("speeds length must equal n_workers")
+            speeds = np.asarray(self.speeds)
+        else:
+            speeds = heterogeneous_speeds(n, slow_factor=slow, base=base)
+        return TimingModel(speeds, pattern, seed=self.seed)
+
+    def build_schedule(self, T: Optional[int] = None,
+                       n: Optional[int] = None) -> Schedule:
+        """Realise the ordering (i_t, π_t) for this spec."""
+        sched = self.make_scheduler(n)
+        return build_schedule(sched, self.make_timing(n), T or self.T)

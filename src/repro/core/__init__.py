@@ -18,7 +18,8 @@ from .schedulers import (
     REGISTRY,
 )
 from .engine import Schedule, build_schedule, round_masks
-from .simulator import replay, run_async_sgd, delay_adaptive_stepsizes, ReplayResult
+from .simulator import (replay, replay_grid, run_async_sgd,
+                        delay_adaptive_stepsizes, ReplayResult)
 from . import theory, trace
 
 __all__ = [
@@ -27,6 +28,7 @@ __all__ = [
     "RandomAsyncWaiting", "ShuffledAsync", "MiniBatch", "RandomReshuffling",
     "make_scheduler", "REGISTRY",
     "Schedule", "build_schedule", "round_masks",
-    "replay", "run_async_sgd", "delay_adaptive_stepsizes", "ReplayResult",
+    "replay", "replay_grid", "run_async_sgd", "delay_adaptive_stepsizes",
+    "ReplayResult",
     "theory", "trace",
 ]

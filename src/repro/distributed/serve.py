@@ -71,13 +71,20 @@ class Server:
 
     # ---- driver ----------------------------------------------------------------
     def generate(self, params, prompts: np.ndarray, n_steps: int,
-                 start_pos: int = 0):
-        """prompts: (B,) current last tokens.  Greedy/temperature sampling."""
-        cfg = self.cfg
-        cache = M.init_cache(cfg, self.serve.batch, self.serve.ctx_len)
-        step = jax.jit(lambda p, c, t, q: M.decode_step(
-            cfg, p, c, t, q, self.serve.ctx_len))
+                 start_pos: int = 0, cache=None):
+        """prompts: (B,) current last tokens.  Greedy/temperature sampling.
+
+        Decodes through :meth:`jit_serve_step` — the sharded, cache-donating
+        compiled step — so the driver and the single-step latency benchmarks
+        execute the same program.  Pass a prefilled ``cache`` to continue
+        from a prompt; otherwise decoding starts from an empty cache.
+        """
+        if cache is None:
+            cache = M.init_cache(self.cfg, self.serve.batch, self.serve.ctx_len)
         toks = jnp.asarray(prompts, jnp.int32)
+        if n_steps <= 0:
+            return np.zeros((toks.shape[0], 0), dtype=np.int32)
+        step = self.jit_serve_step()
         key = jax.random.PRNGKey(self.serve.seed)
         out = []
         for i in range(n_steps):

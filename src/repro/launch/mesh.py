@@ -13,20 +13,25 @@ HBM_BW = 819e9                # B/s
 ICI_BW = 50e9                 # B/s per link
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where the installed jax
+    supports them (>= 0.5), plain make_mesh otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host has (1 device on CPU) as (data=1, model=n)."""
-    n = len(jax.devices())
-    return jax.make_mesh(
-        (1, n), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, len(jax.devices())), ("data", "model"))
 
 
 def mesh_devices(mesh) -> int:

@@ -1,8 +1,10 @@
-"""Training launcher: --arch × --scheduler × mesh → AsyncTrainer loop.
+"""Training launcher: --arch × --scheduler × mesh → trainer backend.
 
-The production entry point.  On real hardware the mesh comes from
-``make_production_mesh``; on this container ``--host-mesh`` uses whatever
-devices exist (the reduced configs train end-to-end on CPU).
+The production entry point, a thin CLI over ``repro.api``: flags build one
+``ExperimentSpec`` + ``TrainJob`` and hand it to ``TrainerBackend``.  On
+real hardware the mesh comes from ``make_production_mesh``; on this
+container ``--host-mesh`` uses whatever devices exist (the reduced configs
+train end-to-end on CPU).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --host-mesh --steps 20 --scheduler shuffled --pattern poisson
@@ -10,9 +12,6 @@ devices exist (the reduced configs train end-to-end on CPU).
 from __future__ import annotations
 
 import argparse
-import time
-
-import numpy as np
 
 
 def main():
@@ -44,76 +43,53 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
+    from ..api import ExperimentSpec, TrainJob, TrainerBackend
     from ..configs import get_arch
-    from ..core import (TimingModel, build_schedule, round_masks,
-                        make_scheduler, heterogeneous_speeds)
-    from ..data import DataConfig, HeterogeneousTokenPipeline
-    from ..distributed import AsyncTrainer, AsyncConfig, DEFAULT_RULES, auto_rules
-    from ..models import n_params, batch_specs
-    from ..optim import OptConfig
+    from ..distributed import DEFAULT_RULES, auto_rules
+    from ..models import n_params
     from .. import checkpoint
     from .mesh import make_production_mesh, make_host_mesh
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced().with_(remat="none")
     mesh = make_host_mesh() if args.host_mesh else \
         make_production_mesh(multi_pod=args.multi_pod)
+    job = TrainJob(
+        arch=args.arch, reduced=args.reduced,
+        remat="none" if args.reduced else None,
+        global_batch=args.global_batch, seq_len=args.seq_len,
+        heterogeneity=args.heterogeneity,
+        delay_rounds=0 if args.sync else args.delay_rounds,
+        microbatches=args.microbatches)
+    cfg = job.make_arch()
     rules = auto_rules(cfg, mesh.shape.get("model", 1)) if args.auto_rules \
         else DEFAULT_RULES
 
-    tr = AsyncTrainer(cfg, mesh,
-                      opt=OptConfig(lr=args.lr, clip_norm=1.0),
-                      async_cfg=AsyncConfig(
-                          delay_rounds=0 if args.sync else args.delay_rounds,
-                          microbatches=args.microbatches),
-                      rules=rules)
-    n_groups = args.n_groups or tr.n_groups
-    tr.n_groups = n_groups
-    if args.global_batch % n_groups:
-        raise SystemExit(f"--global-batch must divide {n_groups} groups")
+    scheduler = args.scheduler if args.wait_b == 1 \
+        else f"{args.scheduler}:b={args.wait_b}"
+    spec = ExperimentSpec(
+        scheduler=scheduler, timing=f"{args.pattern}:slow=6",
+        objective=job, T=args.steps, n_workers=args.n_groups or None,
+        stepsize=args.lr, seed=args.seed)
 
-    print(f"arch={cfg.name} params={n_params(cfg)/1e6:.1f}M mesh={dict(mesh.shape)} "
-          f"groups={n_groups} scheduler={args.scheduler} b={args.wait_b} "
+    print(f"arch={cfg.name} params={n_params(cfg)/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)} groups={args.n_groups or 'auto'} "
+          f"scheduler={args.scheduler} b={args.wait_b} "
           f"delay={0 if args.sync else args.delay_rounds}")
 
-    sched = make_scheduler(args.scheduler, n_groups, b=args.wait_b,
-                           seed=args.seed)
-    tm = TimingModel(heterogeneous_speeds(n_groups, 6.0), args.pattern,
-                     seed=args.seed)
-    masks = round_masks(build_schedule(sched, tm, args.steps * sched.wait_b))
-
-    pipe = HeterogeneousTokenPipeline(DataConfig(
-        vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.global_batch,
-        n_groups=n_groups, heterogeneity=args.heterogeneity, seed=args.seed))
-    state = tr.init_state(jax.random.PRNGKey(args.seed))
-    step = jax.jit(tr.train_step_fn())
-
-    def make_batch(i):
-        b = {"tokens": jnp.asarray(pipe.batch(i)["tokens"])}
-        for k, sp in batch_specs(cfg, args.global_batch, args.seq_len).items():
-            if k != "tokens" and sp.dtype != "int32":   # stubbed modalities
-                b[k] = jax.random.normal(jax.random.PRNGKey(i), sp.shape,
-                                         jnp.float32)
-            elif k == "tokens":
-                b[k] = b[k][:, :sp.shape[1]]
-        return b
-
-    t0 = time.time()
-    for i in range(min(args.steps, masks.shape[0])):
-        state, m = step(state, make_batch(i), jnp.asarray(masks[i]))
+    def on_step(i, state, m):
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
-            print(f"step {i:5d} loss={float(m['loss']):.4f} "
-                  f"|g|={float(m['grad_norm']):.3f} "
-                  f"part={float(m['participation']):.2f} "
-                  f"{time.time()-t0:7.1f}s", flush=True)
+            print(f"step {i:5d} loss={m['loss']:.4f} "
+                  f"|g|={m['grad_norm']:.3f} "
+                  f"part={m['participation']:.2f}", flush=True)
         if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
             checkpoint.save(args.ckpt, state, step=i + 1,
                             meta={"arch": cfg.name})
+
+    backend = TrainerBackend(mesh=mesh, rules=rules, on_step=on_step)
+    res = backend.run(spec)
+    print(f"done in {res.seconds:.1f}s  final loss={res.losses[-1]:.4f}  "
+          f"tau_max={res.trace['tau_max']}")
     if args.ckpt:
-        checkpoint.save(args.ckpt, state, step=args.steps,
+        checkpoint.save(args.ckpt, res.x, step=args.steps,
                         meta={"arch": cfg.name})
         print("final checkpoint:", args.ckpt)
 

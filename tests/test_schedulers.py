@@ -1,7 +1,10 @@
-"""Unit + property tests for schedulers and the discrete-event engine."""
+"""Unit tests for schedulers and the discrete-event engine.
+
+(The hypothesis property tests live in ``test_schedulers_property.py`` so
+this module collects without the optional dependency.)
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     TimingModel,
@@ -157,33 +160,3 @@ def test_round_masks_shape_and_counts():
     m = round_masks(s)
     assert m.shape == (200 // b, N)
     assert np.all(m.sum(axis=1) == b)
-
-
-# ---------------------------------------------------------------------------
-# hypothesis property tests
-# ---------------------------------------------------------------------------
-@settings(max_examples=25, deadline=None)
-@given(
-    n=st.integers(2, 12),
-    b=st.integers(1, 4),
-    name=st.sampled_from(["pure", "pure_waiting", "random", "fedbuff", "shuffled", "minibatch", "rr"]),
-    pattern=st.sampled_from(PATTERNS),
-    seed=st.integers(0, 10_000),
-)
-def test_property_schedule_wellformed(n, b, name, pattern, seed):
-    b = min(b, n)
-    sched = make_scheduler(name, n, b=b, seed=seed)
-    tm = TimingModel(heterogeneous_speeds(n, slow_factor=3.0), pattern, seed=seed)
-    Tq = 8 * sched.wait_b
-    s = build_schedule(sched, tm, Tq)
-    assert s.T == Tq
-    assert np.all(s.delays >= 0)
-    assert np.all(s.assign_iters >= 0)
-    assert s.tau_avg() <= s.tau_max() + 1e-9
-    assert s.tau_c() >= 1
-    # determinism: same seed → same schedule
-    sched2 = make_scheduler(name, n, b=b, seed=seed)
-    tm2 = TimingModel(heterogeneous_speeds(n, slow_factor=3.0), pattern, seed=seed)
-    s2 = build_schedule(sched2, tm2, Tq)
-    assert np.array_equal(s.workers, s2.workers)
-    assert np.array_equal(s.assign_iters, s2.assign_iters)

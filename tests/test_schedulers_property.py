@@ -1,0 +1,45 @@
+"""Hypothesis property tests for the discrete-event engine.
+
+``hypothesis`` is an optional ``[test]`` extra; the whole module skips
+gracefully when it is absent so tier-1 stays green on minimal installs.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PATTERNS,
+    TimingModel,
+    build_schedule,
+    heterogeneous_speeds,
+    make_scheduler,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 12),
+    b=st.integers(1, 4),
+    name=st.sampled_from(["pure", "pure_waiting", "random", "fedbuff", "shuffled", "minibatch", "rr"]),
+    pattern=st.sampled_from(PATTERNS),
+    seed=st.integers(0, 10_000),
+)
+def test_property_schedule_wellformed(n, b, name, pattern, seed):
+    b = min(b, n)
+    sched = make_scheduler(name, n, b=b, seed=seed)
+    tm = TimingModel(heterogeneous_speeds(n, slow_factor=3.0), pattern, seed=seed)
+    Tq = 8 * sched.wait_b
+    s = build_schedule(sched, tm, Tq)
+    assert s.T == Tq
+    assert np.all(s.delays >= 0)
+    assert np.all(s.assign_iters >= 0)
+    assert s.tau_avg() <= s.tau_max() + 1e-9
+    assert s.tau_c() >= 1
+    # determinism: same seed → same schedule
+    sched2 = make_scheduler(name, n, b=b, seed=seed)
+    tm2 = TimingModel(heterogeneous_speeds(n, slow_factor=3.0), pattern, seed=seed)
+    s2 = build_schedule(sched2, tm2, Tq)
+    assert np.array_equal(s.workers, s2.workers)
+    assert np.array_equal(s.assign_iters, s2.assign_iters)

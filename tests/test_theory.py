@@ -1,10 +1,13 @@
-"""Tests for Table-1 rate calculator + Defs 3–4 estimators vs proof bounds."""
+"""Tests for Table-1 rate calculator + Defs 3–4 estimators vs proof bounds.
+
+(The hypothesis property tests live in ``test_theory_property.py`` so this
+module collects without the optional dependency.)
+"""
 import math
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     TimingModel,
@@ -33,16 +36,6 @@ from repro.objectives import QuadraticProblem
 
 
 C = ProblemConstants(L=1.0, F0=1.0, sigma2=1.0, zeta2=0.5, G=2.0)
-
-
-@settings(max_examples=40, deadline=None)
-@given(T=st.integers(100, 10_000), tc=st.integers(1, 32), tm=st.integers(1, 64))
-def test_rates_decrease_in_T(T, tc, tm):
-    tm = max(tm, tc)
-    r1 = pure_async(C, T, tc, tm)
-    r2 = pure_async(C, 4 * T, tc, tm)
-    assert r2 <= r1 + 1e-12
-    assert r1 >= C.zeta2  # the ζ² floor (pure async stalls at heterogeneity)
 
 
 def test_pure_async_bg_removes_tau_max():
@@ -94,16 +87,6 @@ def test_requires_bounded_gradients():
     c = ProblemConstants(L=1.0, F0=1.0, sigma2=1.0, zeta2=0.5, G=0.0)
     with pytest.raises(ValueError):
         random_async(c, 100, 4)
-
-
-@settings(max_examples=20, deadline=None)
-@given(T=st.integers(10, 10_000))
-def test_tuned_stepsizes_positive_and_bounded(T):
-    g1 = stepsize_pure_async(C, T, 4, 8)
-    g2 = stepsize_random_async(C, T, 4)
-    g3 = stepsize_shuffled_async(C, T, 8)
-    for g in (g1, g2, g3):
-        assert 0 < g <= 1.0 / C.L + 1e-9
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,39 @@
+"""Hypothesis property tests for the Table-1 rate calculator.
+
+``hypothesis`` is an optional ``[test]`` extra; the whole module skips
+gracefully when it is absent so tier-1 stays green on minimal installs.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.theory import (
+    ProblemConstants,
+    pure_async,
+    stepsize_pure_async,
+    stepsize_random_async,
+    stepsize_shuffled_async,
+)
+
+C = ProblemConstants(L=1.0, F0=1.0, sigma2=1.0, zeta2=0.5, G=2.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.integers(100, 10_000), tc=st.integers(1, 32), tm=st.integers(1, 64))
+def test_rates_decrease_in_T(T, tc, tm):
+    tm = max(tm, tc)
+    r1 = pure_async(C, T, tc, tm)
+    r2 = pure_async(C, 4 * T, tc, tm)
+    assert r2 <= r1 + 1e-12
+    assert r1 >= C.zeta2  # the ζ² floor (pure async stalls at heterogeneity)
+
+
+@settings(max_examples=20, deadline=None)
+@given(T=st.integers(10, 10_000))
+def test_tuned_stepsizes_positive_and_bounded(T):
+    g1 = stepsize_pure_async(C, T, 4, 8)
+    g2 = stepsize_random_async(C, T, 4)
+    g3 = stepsize_shuffled_async(C, T, 8)
+    for g in (g1, g2, g3):
+        assert 0 < g <= 1.0 / C.L + 1e-9
