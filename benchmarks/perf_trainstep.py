@@ -1,8 +1,20 @@
 """Micro-benchmark: AsyncTrainer train_step / serve_step wall time on the
-reduced configs (CPU; TPU perf comes from §Roofline, not wall clock)."""
+reduced configs (CPU; TPU perf comes from §Roofline, not wall clock).
+
+Two modes:
+
+* default      — per-arch train_step wall time → ``perf.csv`` (legacy).
+* ``--ab``     — reference vs fused ``update_impl`` A/B on the SAME arch,
+  batch and state → ``BENCH_trainstep.json``.  On TPU the fused column is
+  the compiled Mosaic kernels (the number that matters); off-TPU it is the
+  Pallas interpreter, so treat the CPU "speedup" as a correctness artifact,
+  not a perf claim (the JSON records backend + impl so nobody misreads it).
+"""
 from __future__ import annotations
 
+import argparse
 import csv
+import json
 import os
 import time
 
@@ -14,12 +26,42 @@ from jax.sharding import Mesh
 from repro.configs import ARCHS, get_arch
 from repro.data import DataConfig, HeterogeneousTokenPipeline
 from repro.distributed import AsyncTrainer, AsyncConfig
-from repro.optim import OptConfig
+from repro.optim import OptConfig, resolve_update_impl
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _batch_for(cfg, B, S, seed=0):
+    pipe = HeterogeneousTokenPipeline(DataConfig(cfg.vocab, S, B))
+    from repro.models import batch_specs
+    batch = {}
+    for k, sp in batch_specs(cfg, B, S).items():
+        if sp.dtype == "int32":
+            batch[k] = jnp.asarray(pipe.batch(0)["tokens"][:, :sp.shape[1]])
+        else:   # stubbed modality embeddings (vlm patches / audio frames)
+            batch[k] = jax.random.normal(jax.random.PRNGKey(1), sp.shape,
+                                         jnp.float32)
+    return batch
+
+
+def _time_step(tr, batch, iters):
+    state = tr.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(tr.train_step_fn())
+    mask = jnp.ones((tr.n_groups,))
+    state, m = step(state, batch, mask)          # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.time()
+    for _ in range(iters):
+        state, m = step(state, batch, mask)
+    jax.block_until_ready(m["loss"])
+    return (time.time() - t0) / iters * 1e6, float(m["loss"])
 
 
 def run(out: str = "experiments/figs", quick: bool = False):
     os.makedirs(out, exist_ok=True)
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    mesh = _mesh()
     rows = []
     names = ["qwen2-0.5b", "deepseek-moe-16b", "mamba2-370m"] if quick \
         else sorted(ARCHS)
@@ -27,29 +69,11 @@ def run(out: str = "experiments/figs", quick: bool = False):
         cfg = get_arch(name).reduced().with_(remat="none")
         tr = AsyncTrainer(cfg, mesh, opt=OptConfig(lr=1e-3),
                           async_cfg=AsyncConfig(delay_rounds=1))
-        state = tr.init_state(jax.random.PRNGKey(0))
-        step = jax.jit(tr.train_step_fn())
         B, S = 2, 32
-        pipe = HeterogeneousTokenPipeline(DataConfig(cfg.vocab, S, B))
-        from repro.models import batch_specs
-        batch = {}
-        for k, sp in batch_specs(cfg, B, S).items():
-            if sp.dtype == "int32":
-                batch[k] = jnp.asarray(pipe.batch(0)["tokens"][:, :sp.shape[1]])
-            else:   # stubbed modality embeddings (vlm patches / audio frames)
-                batch[k] = jax.random.normal(jax.random.PRNGKey(1), sp.shape,
-                                             jnp.float32)
-        mask = jnp.ones((tr.n_groups,))
-        state, m = step(state, batch, mask)          # compile
-        jax.block_until_ready(m["loss"])
-        t0 = time.time()
-        iters = 5
-        for i in range(iters):
-            state, m = step(state, batch, mask)
-        jax.block_until_ready(m["loss"])
-        us = (time.time() - t0) / iters * 1e6
+        batch = _batch_for(cfg, B, S)
+        us, loss = _time_step(tr, batch, iters=5)
         rows.append({"name": f"train_step_{name}", "us_per_call": round(us, 1),
-                     "derived": f"loss={float(m['loss']):.3f}"})
+                     "derived": f"loss={loss:.3f}"})
     with open(os.path.join(out, "perf.csv"), "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=["name", "us_per_call", "derived"])
         w.writeheader()
@@ -57,6 +81,73 @@ def run(out: str = "experiments/figs", quick: bool = False):
     return rows
 
 
+def run_ab(out: str = "experiments/figs", quick: bool = False, iters: int = 5,
+           archs=None):
+    """Reference-vs-fused A/B on identical (arch, state, batch) pairs.
+
+    Writes ``BENCH_trainstep.json``: one entry per arch with
+    ``reference_us`` / ``fused_us`` / ``speedup`` plus enough provenance
+    (backend, effective impl, shapes) to interpret the numbers."""
+    os.makedirs(out, exist_ok=True)
+    mesh = _mesh()
+    if archs is None:
+        archs = ["qwen2-0.5b"] if quick else \
+            ["qwen2-0.5b", "deepseek-moe-16b", "mamba2-370m"]
+    fused_impl = resolve_update_impl("pallas")
+    entries = []
+    for name in archs:
+        cfg = get_arch(name).reduced().with_(remat="none")
+        B, S = 2, 32
+        batch = _batch_for(cfg, B, S)
+        entry = {"arch": name, "batch": B, "seq_len": S, "iters": iters}
+        for label, impl in (("reference", "reference"), ("fused", fused_impl)):
+            tr = AsyncTrainer(
+                cfg, mesh,
+                opt=OptConfig(lr=1e-3, update_impl=impl),
+                async_cfg=AsyncConfig(delay_rounds=1))
+            us, loss = _time_step(tr, batch, iters)
+            entry[f"{label}_us"] = round(us, 1)
+            entry[f"{label}_loss"] = round(loss, 4)
+        entry["fused_impl"] = fused_impl
+        entry["speedup"] = round(entry["reference_us"] / entry["fused_us"], 3)
+        entries.append(entry)
+        print(f"{name}: reference={entry['reference_us']:.0f}us "
+              f"fused[{fused_impl}]={entry['fused_us']:.0f}us "
+              f"speedup={entry['speedup']}x")
+    payload = {
+        "bench": "trainstep_ab",
+        "backend": jax.default_backend(),
+        "fused_impl": fused_impl,
+        "note": ("fused==pallas_interpret means the Pallas INTERPRETER ran "
+                 "(off-TPU correctness mode); speedups are only meaningful "
+                 "when fused_impl == 'pallas' on a TPU backend"),
+        "entries": entries,
+    }
+    path = os.path.join(out, "BENCH_trainstep.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ab", action="store_true",
+                    help="reference-vs-fused update_impl A/B → "
+                         "BENCH_trainstep.json")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--out", default="experiments/figs")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch names (A/B mode)")
+    args = ap.parse_args()
+    archs = args.archs.split(",") if args.archs else None
+    if args.ab:
+        run_ab(out=args.out, quick=args.quick, iters=args.iters, archs=archs)
+    else:
+        for r in run(out=args.out, quick=args.quick):
+            print(r)
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(r)
+    main()

@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from ..core import (delay_adaptive_stepsizes, replay, replay_grid,
-                    round_masks)
+                    round_delay_scales, round_masks)
 from ..core.trace import summarize
 from .result import RunResult
 from .spec import ExperimentSpec, ServeJob, StepsizePolicy, TrainJob
@@ -175,7 +175,8 @@ class TrainerBackend:
         rules = self.rules if self.rules is not None else DEFAULT_RULES
         tr = AsyncTrainer(
             cfg, mesh,
-            opt=OptConfig(name=job.opt, lr=lr, clip_norm=job.clip_norm),
+            opt=OptConfig(name=job.opt, lr=lr, clip_norm=job.clip_norm,
+                          update_impl=job.update_impl),
             async_cfg=AsyncConfig(delay_rounds=job.delay_rounds,
                                   delay_adaptive=adaptive,
                                   microbatches=job.microbatches),
@@ -193,9 +194,24 @@ class TrainerBackend:
         step = jax.jit(tr.train_step_fn())
 
         rounds = min(spec.T, masks.shape[0])
+        # delay-adaptive: the per-round γ scale comes from the realised
+        # schedule's delay metadata and rides into the step (a traced
+        # scalar — one compile covers all rounds); the scale at round i
+        # belongs to the gradient APPLIED at i.  AsyncTrainer's gbuf is a
+        # single swapped-every-round buffer, so the realised extra
+        # staleness is exactly ONE round whenever delay_rounds > 0,
+        # whatever the nominal config value says
+        scales = round_delay_scales(
+            schedule, rounds,
+            delay_rounds=1 if job.delay_rounds > 0 else 0) \
+            if adaptive else None
         losses, grad_norms, metrics_rows = [], [], []
         for i in range(rounds):
-            state, m = step(state, make_batch(i), jnp.asarray(masks[i]))
+            args = (state, make_batch(i), jnp.asarray(masks[i]))
+            if scales is not None:
+                state, m = step(*args, jnp.float32(scales[i]))
+            else:
+                state, m = step(*args)
             m = {k: float(v) for k, v in m.items()}
             losses.append(m["loss"])
             grad_norms.append(m["grad_norm"])
@@ -210,7 +226,9 @@ class TrainerBackend:
             schedule=schedule, trace=summarize(schedule),
             seconds=time.time() - t0,
             extra={"metrics": metrics_rows, "masks": masks,
-                   "arch": cfg.name, "n_groups": n_groups})
+                   "arch": cfg.name, "n_groups": n_groups,
+                   "update_impl": tr.update_impl,
+                   "delay_scales": scales})
 
 
 class ServeBackend:

@@ -124,6 +124,10 @@ class TrainJob:
     microbatches: int = 1
     opt: str = "adam"
     clip_norm: Optional[float] = 1.0
+    #: how the server update executes: "reference" (tree of elementwise
+    #: jnp ops) | "pallas" (fused TPU kernels; off-TPU it degrades to
+    #: interpret) | "pallas_interpret" (same kernels, Pallas interpreter)
+    update_impl: str = "reference"
 
     def make_arch(self):
         from ..configs import get_arch

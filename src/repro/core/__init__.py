@@ -17,7 +17,8 @@ from .schedulers import (
     make_scheduler,
     REGISTRY,
 )
-from .engine import Schedule, build_schedule, round_masks
+from .engine import (Schedule, build_schedule, round_masks,
+                     round_delay_scales)
 from .simulator import (replay, replay_grid, run_async_sgd,
                         delay_adaptive_stepsizes, ReplayResult)
 from . import theory, trace
@@ -27,7 +28,7 @@ __all__ = [
     "Scheduler", "PureAsync", "PureAsyncWaiting", "RandomAsync",
     "RandomAsyncWaiting", "ShuffledAsync", "MiniBatch", "RandomReshuffling",
     "make_scheduler", "REGISTRY",
-    "Schedule", "build_schedule", "round_masks",
+    "Schedule", "build_schedule", "round_masks", "round_delay_scales",
     "replay", "replay_grid", "run_async_sgd", "delay_adaptive_stepsizes",
     "ReplayResult",
     "theory", "trace",

@@ -180,7 +180,43 @@ def round_masks(schedule: Schedule, n_rounds: int | None = None) -> np.ndarray:
         n_rounds = total_rounds
     n_rounds = min(n_rounds, total_rounds)
     masks = np.zeros((n_rounds, schedule.n_workers), dtype=np.float32)
-    for q in range(n_rounds):
-        for t in range(q * b, (q + 1) * b):
-            masks[q, schedule.workers[t]] += 1.0
+    # vectorized scatter: receipt t of round q = t // b contributes +1 to
+    # (q, workers[t]); np.add.at accumulates duplicate (q, w) pairs
+    w = schedule.workers[:n_rounds * b]
+    q = np.repeat(np.arange(n_rounds), b)
+    np.add.at(masks, (q, w), 1.0)
     return masks
+
+
+def round_delay_scales(schedule: Schedule, n_rounds: int | None = None,
+                       delay_rounds: int = 0) -> np.ndarray:
+    """(rounds,) delay-adaptive stepsize scales from the realised schedule.
+
+    The [Koloskova et al. 22]-style rule γ_t = γ·min(1, τ_C/(τ_t+1)) at
+    round granularity: the gradient APPLIED at round q is scaled by the
+    rule evaluated at its effective staleness.  ``delay_rounds`` is the
+    REALISED buffering depth in rounds (AsyncTrainer's single
+    swapped-every-round gbuf ⇒ 1 whenever its delay branch is active): the
+    gradient applied at q was RECEIVED in round q − delay_rounds (mean
+    receipt delay τ̄ over its ``wait_b`` receipts) and then buffered
+    ``delay_rounds`` more rounds, so
+    τ_applied(q) = τ̄_{q−delay_rounds} + delay_rounds.  The first
+    ``delay_rounds`` rounds apply the (gated, empty) initial buffer and get
+    a neutral scale of 1.  This is the per-round ``delay_scale`` input of
+    ``AsyncTrainer.train_step_fn`` — computed host-side from schedule
+    metadata, applied device-side inside the fused kernels."""
+    b = schedule.wait_b
+    total_rounds = schedule.T // b
+    if n_rounds is None:
+        n_rounds = total_rounds
+    n_rounds = min(n_rounds, total_rounds)
+    d = schedule.delays[:n_rounds * b].astype(np.float64)
+    tau_round = d.reshape(n_rounds, b).mean(axis=1)
+    if delay_rounds:
+        shift = min(delay_rounds, n_rounds)
+        shifted = np.empty_like(tau_round)
+        shifted[:shift] = 0.0                  # → scale 1 (gated rounds)
+        shifted[shift:] = tau_round[:n_rounds - shift] + delay_rounds
+        tau_round = shifted
+    tau_c = max(schedule.tau_c(), 1)
+    return np.minimum(1.0, tau_c / (tau_round + 1.0)).astype(np.float32)

@@ -31,7 +31,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..configs.base import ArchConfig
 from ..models import model as M
 from ..models.specs import Spec, abstract_tree, axes_tree
-from ..optim import OptConfig, adam_init, make_optimizer, global_norm
+from ..optim import (OptConfig, adam_init, make_optimizer, make_delayed_apply,
+                     global_norm, resolve_update_impl)
 from .sharding import Rules, DEFAULT_RULES, tree_pspecs, tree_shardings, zero_pspec, logical_pspec
 
 
@@ -41,6 +42,10 @@ class AsyncConfig:
     delay_adaptive: bool = False   # scale lr by 1/(delay+1) ([32]-style)
     aux_coeff: float = 0.01        # MoE load-balance coefficient
     microbatches: int = 1          # gradient accumulation (memory lever)
+    #: None → take ``OptConfig.update_impl``; set to override per-trainer.
+    #: ``"pallas"``/``"pallas_interpret"`` route the delayed-buffer apply
+    #: through the fused kernels (one HBM pass per tile, gbuf swap included).
+    update_impl: Optional[str] = None
 
 
 class AsyncTrainer:
@@ -52,12 +57,16 @@ class AsyncTrainer:
                  rules: Rules = DEFAULT_RULES):
         self.cfg = cfg
         self.mesh = mesh
+        if async_cfg.update_impl is not None:
+            opt = dataclasses.replace(opt, update_impl=async_cfg.update_impl)
         self.opt = opt
         self.async_cfg = async_cfg
         self.rules = rules
         self.n_groups = int(np.prod([mesh.shape[a] for a in rules.data_axes
                                      if a in mesh.axis_names])) or 1
+        self.update_impl = resolve_update_impl(opt.update_impl)
         self._init_opt, self._update = make_optimizer(opt)
+        self._delayed_apply = make_delayed_apply(opt)
 
     # ------------------------------------------------------------------ specs
     def state_specs(self):
@@ -134,9 +143,20 @@ class AsyncTrainer:
         return jnp.repeat(mask, per, total_repeat_length=batch_size)
 
     def train_step_fn(self):
+        """The pjit train step.
+
+        ``step(state, batch, mask, delay_scale=None)``: ``delay_scale`` is
+        the optional per-round stepsize scale (γ_q = γ·delay_scale_q) fed
+        from the realised schedule's delay metadata
+        (:func:`repro.core.round_delay_scales`); omitted, the static
+        ``delay_adaptive`` 1/(1+delay_rounds) rule applies.  With
+        ``delay_rounds > 0`` the whole server update (eq. 2) — consume the
+        stale ``gbuf``, step params/moments, buffer the fresh grads — is one
+        :func:`repro.optim.make_delayed_apply` call, which the pallas
+        ``update_impl``s execute as one fused HBM pass per tile."""
         cfg, acfg = self.cfg, self.async_cfg
 
-        def step(state, batch, mask):
+        def step(state, batch, mask, delay_scale=None):
             bsz = batch["tokens"].shape[0]
             w = self._example_weights(mask.astype(jnp.float32), bsz)
 
@@ -182,23 +202,27 @@ class AsyncTrainer:
             grads = jax.tree_util.tree_map(
                 jax.lax.with_sharding_constraint, grads, self._grad_shardings())
 
-            if acfg.delay_rounds > 0:
-                apply_grads = state["gbuf"]          # stale by one round
-                new_gbuf = grads
-            else:
-                apply_grads = grads
-                new_gbuf = None
-
-            lr_scale = 1.0
-            if acfg.delay_adaptive and acfg.delay_rounds > 0:
+            if delay_scale is not None:
+                lr_scale = jnp.asarray(delay_scale, jnp.float32)
+            elif acfg.delay_adaptive and acfg.delay_rounds > 0:
                 lr_scale = 1.0 / (1.0 + acfg.delay_rounds)
+            else:
+                lr_scale = 1.0
 
             # skip the very first round (empty buffer) via a smooth gate
             gate = jnp.where(
                 (state["step"] == 0) & (acfg.delay_rounds > 0), 0.0, 1.0)
-            new_params, new_opt, gnorm = self._update(
-                apply_grads, state["opt"], state["params"], self.opt,
-                lr_scale=lr_scale * gate)
+            if acfg.delay_rounds > 0:
+                # one fused apply: consume the stale buffer, write the fresh
+                # grads back (reference impl composes the same semantics)
+                new_params, new_gbuf, new_opt, gnorm = self._delayed_apply(
+                    grads, state["gbuf"], state["opt"], state["params"],
+                    self.opt, lr_scale=lr_scale * gate)
+            else:
+                new_params, new_opt, gnorm = self._update(
+                    grads, state["opt"], state["params"], self.opt,
+                    lr_scale=lr_scale * gate)
+                new_gbuf = None
 
             new_state = {
                 "params": new_params,

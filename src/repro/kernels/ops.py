@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas
-from .async_update import async_update_pallas, fused_adam_pallas
+from .async_update import (async_update_pallas, fused_adam_pallas,
+                           fused_adam_delayed_pallas)
 from .ssd_chunk import ssd_chunk_pallas
 
 
@@ -67,6 +68,31 @@ def fused_adam(p, m, v, g, *, lr, beta1=0.9, beta2=0.95, eps=1e-8, count=1,
         interpret = _interpret_default()
     return fused_adam_pallas(p, m, v, g, lr=lr, beta1=beta1, beta2=beta2,
                              eps=eps, count=count, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "weight_decay",
+                                   "use_kernel", "interpret"))
+def fused_adam_delayed(p, m, v, gbuf, g, *, lr, beta1=0.9, beta2=0.95,
+                       eps=1e-8, count=1, clip_scale=1.0, weight_decay=0.0,
+                       use_kernel=True, interpret=None):
+    """Delayed-buffer Adam + gbuf swap in one pass, on a single flat
+    tensor.  ``lr`` / ``count`` / ``clip_scale`` are TRACED (they change
+    every step — marking them static would recompile per step); the actual
+    trainer hot loop goes through ``repro.optim.make_delayed_apply``, which
+    calls the pallas wrapper directly, this is the standalone entry."""
+    count = jnp.asarray(count)
+    if not use_kernel:
+        c = count.astype(jnp.float32)
+        return ref.reference_fused_adam_delayed(
+            p, m, v, gbuf, g, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+            bc1=1 - beta1 ** c, bc2=1 - beta2 ** c,
+            clip_scale=clip_scale, weight_decay=weight_decay)
+    if interpret is None:
+        interpret = _interpret_default()
+    return fused_adam_delayed_pallas(
+        p, m, v, gbuf, g, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+        count=count, clip_scale=clip_scale, weight_decay=weight_decay,
+        interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("use_kernel", "interpret"))

@@ -40,14 +40,26 @@ def reference_async_update(params, gbuf, grads, *, lr, clip_scale, delay_scale):
     return p_new, grads
 
 
-def reference_fused_adam(p, m, v, g, *, lr, beta1, beta2, eps, bc1, bc2):
+def reference_fused_adam(p, m, v, g, *, lr, beta1, beta2, eps, bc1, bc2,
+                         clip_scale=1.0, weight_decay=0.0):
     """One fused Adam step on flat arrays; moments f32."""
-    g32 = g.astype(F32)
+    g32 = clip_scale * g.astype(F32)
     m_new = beta1 * m + (1 - beta1) * g32
     v_new = beta2 * v + (1 - beta2) * g32 * g32
     step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    step = step + weight_decay * p.astype(F32)
     p_new = p - (lr * step).astype(p.dtype)
     return p_new, m_new, v_new
+
+
+def reference_fused_adam_delayed(p, m, v, gbuf, g, *, lr, beta1, beta2, eps,
+                                 bc1, bc2, clip_scale=1.0, weight_decay=0.0):
+    """Delayed-buffer Adam: the stale gbuf drives the step, the fresh g is
+    buffered.  Returns (p', m', v', gbuf')."""
+    p_new, m_new, v_new = reference_fused_adam(
+        p, m, v, gbuf, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+        bc1=bc1, bc2=bc2, clip_scale=clip_scale, weight_decay=weight_decay)
+    return p_new, m_new, v_new, g
 
 
 def reference_ssd_chunk(x, dt, A, B_, C_):

@@ -32,6 +32,14 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--delay-rounds", type=int, default=1)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--update-impl", default="reference",
+                    choices=["reference", "pallas", "pallas_interpret"],
+                    help="server-update execution: fused Pallas kernels "
+                         "('pallas'; off-TPU degrades to interpret) or the "
+                         "reference elementwise path")
+    ap.add_argument("--delay-adaptive", action="store_true",
+                    help="per-round stepsize scale from the schedule's "
+                         "delay metadata (removes the tau_max dependence)")
     ap.add_argument("--sync", action="store_true")
     ap.add_argument("--host-mesh", action="store_true",
                     help="use this host's devices instead of the 16x16 pod")
@@ -58,22 +66,25 @@ def main():
         global_batch=args.global_batch, seq_len=args.seq_len,
         heterogeneity=args.heterogeneity,
         delay_rounds=0 if args.sync else args.delay_rounds,
-        microbatches=args.microbatches)
+        microbatches=args.microbatches,
+        update_impl=args.update_impl)
     cfg = job.make_arch()
     rules = auto_rules(cfg, mesh.shape.get("model", 1)) if args.auto_rules \
         else DEFAULT_RULES
 
     scheduler = args.scheduler if args.wait_b == 1 \
         else f"{args.scheduler}:b={args.wait_b}"
+    stepsize = f"delay_adaptive:{args.lr}" if args.delay_adaptive else args.lr
     spec = ExperimentSpec(
         scheduler=scheduler, timing=f"{args.pattern}:slow=6",
         objective=job, T=args.steps, n_workers=args.n_groups or None,
-        stepsize=args.lr, seed=args.seed)
+        stepsize=stepsize, seed=args.seed)
 
     print(f"arch={cfg.name} params={n_params(cfg)/1e6:.1f}M "
           f"mesh={dict(mesh.shape)} groups={args.n_groups or 'auto'} "
           f"scheduler={args.scheduler} b={args.wait_b} "
-          f"delay={0 if args.sync else args.delay_rounds}")
+          f"delay={0 if args.sync else args.delay_rounds} "
+          f"update_impl={args.update_impl}")
 
     def on_step(i, state, m):
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:

@@ -4,16 +4,42 @@
 * Adam — f32 moments regardless of param dtype; moments carry ZeRO-shardable
   logical axes identical to their parameter.
 * Delay-adaptive stepsize scale (the [32]-style trick that removes τ_max).
+* ``update_impl`` selects HOW the step executes: ``"reference"`` is the
+  tree-of-elementwise jnp path; ``"pallas"`` routes every leaf through the
+  fused server-update kernels in :mod:`repro.kernels.async_update` (one HBM
+  pass per tile); ``"pallas_interpret"`` is the same kernels under the
+  Pallas interpreter (CPU-correct, the CI parity vehicle).  ``"pallas"``
+  silently degrades to ``"pallas_interpret"`` off-TPU, see
+  :func:`resolve_update_impl`.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 F32 = jnp.float32
+
+UPDATE_IMPLS = ("reference", "pallas", "pallas_interpret")
+
+
+def resolve_update_impl(impl: str) -> str:
+    """Map the requested impl to what this host can execute.
+
+    ``"pallas"`` compiles Mosaic TPU kernels; on CPU/GPU backends the same
+    kernels run under the Pallas interpreter instead, so requesting
+    ``"pallas"`` off-TPU degrades to ``"pallas_interpret"`` (identical
+    numerics, no compile).  ``"reference"``/``"pallas_interpret"`` pass
+    through unchanged."""
+    if impl not in UPDATE_IMPLS:
+        raise ValueError(
+            f"unknown update_impl {impl!r}; want one of {UPDATE_IMPLS}")
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        return "pallas_interpret"
+    return impl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +52,7 @@ class OptConfig:
     weight_decay: float = 0.0
     momentum: float = 0.0         # sgd only
     clip_norm: Optional[float] = 1.0   # Assumption 4 enforcement
+    update_impl: str = "reference"     # reference | pallas | pallas_interpret
 
 
 def global_norm(tree) -> jax.Array:
@@ -38,6 +65,24 @@ def clip_by_global_norm(tree, max_norm: float):
     scale = jnp.minimum(1.0, max_norm / (norm + 1e-12)).astype(F32)
     return jax.tree_util.tree_map(
         lambda g: (g.astype(F32) * scale).astype(g.dtype), tree), norm
+
+
+def clip_scale_by_global_norm(tree, max_norm: Optional[float]):
+    """(scale, norm) WITHOUT materialising the scaled tree — the fused path
+    folds ``scale`` into the kernel's SMEM scalars instead of spending an
+    extra HBM pass rescaling every leaf."""
+    norm = global_norm(tree)
+    if not max_norm:
+        return jnp.asarray(1.0, F32), norm
+    return jnp.minimum(1.0, max_norm / (norm + 1e-12)).astype(F32), norm
+
+
+def _tree_unzip(out, n: int):
+    """tree-of-n-tuples → n-tuple-of-trees (shared by all update impls)."""
+    is_leaf = lambda x: isinstance(x, tuple)
+    return tuple(
+        jax.tree_util.tree_map(lambda t, i=i: t[i], out, is_leaf=is_leaf)
+        for i in range(n))
 
 
 def adam_init(params):
@@ -74,12 +119,7 @@ def adam_update(grads, opt_state, params, cfg: OptConfig, lr_scale=1.0):
         return newp, m, v
 
     out = jax.tree_util.tree_map(upd, params, grads, opt_state["m"], opt_state["v"])
-    newp = jax.tree_util.tree_map(lambda t: t[0], out,
-                                  is_leaf=lambda x: isinstance(x, tuple))
-    m = jax.tree_util.tree_map(lambda t: t[1], out,
-                               is_leaf=lambda x: isinstance(x, tuple))
-    v = jax.tree_util.tree_map(lambda t: t[2], out,
-                               is_leaf=lambda x: isinstance(x, tuple))
+    newp, m, v = _tree_unzip(out, 3)
     return newp, {"m": m, "v": v, "count": count}, gnorm
 
 
@@ -103,9 +143,128 @@ def sgd_update(grads, opt_state, params, cfg: OptConfig, lr_scale=1.0):
     return newp, {"m": m, "v": opt_state["v"], "count": count}, gnorm
 
 
-def make_optimizer(cfg: OptConfig):
+# --------------------------------------------------------------------------
+# fused (Pallas) execution of the same updates
+# --------------------------------------------------------------------------
+def fused_adam_update(grads, opt_state, params, cfg: OptConfig, lr_scale=1.0,
+                      *, interpret: bool):
+    """``adam_update`` semantics, executed leaf-by-leaf by the fused Pallas
+    kernel: clip factor, bias corrections and weight decay ride the SMEM
+    scalar block, so each leaf is ONE read-modify-write pass."""
+    from ..kernels.async_update import fused_adam_pallas
+
+    clip_scale, gnorm = clip_scale_by_global_norm(grads, cfg.clip_norm)
+    count = opt_state["count"] + 1
+    out = jax.tree_util.tree_map(
+        lambda p, g, m, v: fused_adam_pallas(
+            p, m, v, g, lr=cfg.lr * lr_scale, beta1=cfg.beta1,
+            beta2=cfg.beta2, eps=cfg.eps, count=count,
+            clip_scale=clip_scale, weight_decay=cfg.weight_decay,
+            interpret=interpret),
+        params, grads, opt_state["m"], opt_state["v"])
+    newp, m, v = _tree_unzip(out, 3)
+    return newp, {"m": m, "v": v, "count": count}, gnorm
+
+
+def fused_sgd_update(grads, opt_state, params, cfg: OptConfig, lr_scale=1.0,
+                     *, interpret: bool):
+    """SGD through the swap-free ``sgd_step`` kernel (momentum falls back
+    to the reference tree path — no fused momentum kernel yet)."""
+    if cfg.momentum:
+        return sgd_update(grads, opt_state, params, cfg, lr_scale=lr_scale)
+    from ..kernels.async_update import sgd_step_pallas
+
+    clip_scale, gnorm = clip_scale_by_global_norm(grads, cfg.clip_norm)
+    newp = jax.tree_util.tree_map(
+        lambda p, g: sgd_step_pallas(
+            p, g, lr=cfg.lr, clip_scale=clip_scale,
+            delay_scale=lr_scale, interpret=interpret),
+        params, grads)
+    count = opt_state["count"] + 1
+    return newp, {"m": opt_state["m"], "v": opt_state["v"],
+                  "count": count}, gnorm
+
+
+# --------------------------------------------------------------------------
+# delayed-buffer apply: the AsGrad server update (eq. 2) as ONE operation
+# --------------------------------------------------------------------------
+def reference_delayed_apply(grads, gbuf, opt_state, params, cfg: OptConfig,
+                            lr_scale=1.0):
+    """Apply the STALE buffer, store the fresh grads: the semantics of the
+    trainer's ``delay_rounds > 0`` branch, as a reusable function.
+
+    Returns (new_params, new_gbuf, new_opt_state, gnorm) where ``gnorm`` is
+    the pre-clip norm of the APPLIED (stale) gradient."""
+    update = adam_update if cfg.name == "adam" else sgd_update
+    newp, new_opt, gnorm = update(gbuf, opt_state, params, cfg,
+                                  lr_scale=lr_scale)
+    return newp, grads, new_opt, gnorm
+
+
+def fused_delayed_apply(grads, gbuf, opt_state, params, cfg: OptConfig,
+                        lr_scale=1.0, *, interpret: bool):
+    """The fused production path: per leaf, ONE kernel consumes the stale
+    buffer, steps the parameters (+ moments for Adam) and writes the fresh
+    gradient back into the buffer — the gbuf swap costs no extra HBM pass."""
+    clip_scale, gnorm = clip_scale_by_global_norm(gbuf, cfg.clip_norm)
+    count = opt_state["count"] + 1
     if cfg.name == "adam":
-        return adam_init, adam_update
+        from ..kernels.async_update import fused_adam_delayed_pallas
+
+        out = jax.tree_util.tree_map(
+            lambda p, gb, g, m, v: fused_adam_delayed_pallas(
+                p, m, v, gb, g, lr=cfg.lr * lr_scale, beta1=cfg.beta1,
+                beta2=cfg.beta2, eps=cfg.eps, count=count,
+                clip_scale=clip_scale, weight_decay=cfg.weight_decay,
+                interpret=interpret),
+            params, gbuf, grads, opt_state["m"], opt_state["v"])
+        newp, m, v, new_gbuf = _tree_unzip(out, 4)
+        return newp, new_gbuf, {"m": m, "v": v, "count": count}, gnorm
+    if cfg.momentum:   # momentum-SGD keeps the reference tree path
+        return reference_delayed_apply(grads, gbuf, opt_state, params, cfg,
+                                       lr_scale=lr_scale)
+    from ..kernels.async_update import async_update_pallas
+
+    out = jax.tree_util.tree_map(
+        lambda p, gb, g: async_update_pallas(
+            p, gb, g, lr=cfg.lr, clip_scale=clip_scale,
+            delay_scale=lr_scale, interpret=interpret),
+        params, gbuf, grads)
+    newp, new_gbuf = _tree_unzip(out, 2)
+    return newp, new_gbuf, {"m": opt_state["m"], "v": opt_state["v"],
+                            "count": count}, gnorm
+
+
+def make_optimizer(cfg: OptConfig):
+    """(init_fn, update_fn) for ``cfg``, routed through ``cfg.update_impl``.
+
+    All impls share the state tree and the
+    ``update(grads, opt_state, params, cfg, lr_scale) → (p', state', gnorm)``
+    contract; parity is gated by ``tests/test_optim_fused.py``."""
+    impl = resolve_update_impl(cfg.update_impl)
+    if impl == "reference":
+        if cfg.name == "adam":
+            return adam_init, adam_update
+        if cfg.name == "sgd":
+            return adam_init, sgd_update   # same state tree (m unused w/o momentum)
+        raise ValueError(cfg.name)
+    interpret = impl == "pallas_interpret"
+    if cfg.name == "adam":
+        return adam_init, partial(fused_adam_update, interpret=interpret)
     if cfg.name == "sgd":
-        return adam_init, sgd_update     # same state tree (m unused w/o momentum)
+        return adam_init, partial(fused_sgd_update, interpret=interpret)
     raise ValueError(cfg.name)
+
+
+def make_delayed_apply(cfg: OptConfig):
+    """The delayed-buffer server update as one callable:
+
+        apply(grads, gbuf, opt_state, params, cfg, lr_scale)
+            → (new_params, new_gbuf, new_opt_state, gnorm)
+
+    ``"reference"`` composes clip + update + python-side buffer swap;
+    the pallas impls fuse all three into the kernels."""
+    impl = resolve_update_impl(cfg.update_impl)
+    if impl == "reference":
+        return reference_delayed_apply
+    return partial(fused_delayed_apply, interpret=impl == "pallas_interpret")

@@ -1,0 +1,109 @@
+"""Golden-trace regression tests for the discrete-event engine.
+
+``build_schedule`` is the single source of truth for the ordering
+(i_t, π_t) — the simulator replay, the trainer masks and the theory stats
+all consume it.  A silent change in event ordering (heap tie-breaks, queue
+pops, RNG call order) would shift every downstream result while each
+individual test still "looks plausible".  These tests freeze one small
+schedule per (scheduler × timing model) pair under ``tests/fixtures/engine``
+and assert the realised ``workers``, ``assign_iters`` and the paper's delay
+statistics (τ_max / τ_avg / τ_C, Defs 1–2) are **bit-identical** to the
+frozen trace.
+
+Regenerate (ONLY after an intentional semantic change, and say so in the
+commit message):
+
+    PYTHONPATH=src python tests/test_engine_golden.py --regen
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (PATTERNS, REGISTRY, TimingModel, build_schedule,
+                        heterogeneous_speeds, make_scheduler)
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures", "engine")
+
+#: fixture scenario — small enough to eyeball, big enough to exercise
+#: queueing (random/fedbuff assign busy workers) and a reshuffle boundary
+N_WORKERS = 5
+T = 24
+SEED = 0
+SLOW = 4.0
+WAITING = {"pure_waiting": 3, "fedbuff": 3, "minibatch": 3}
+
+PAIRS = [(s, p) for s in sorted(REGISTRY) for p in PATTERNS]
+
+
+def _build(name: str, pattern: str):
+    sched = make_scheduler(name, N_WORKERS, b=WAITING.get(name, 1), seed=SEED)
+    timing = TimingModel(heterogeneous_speeds(N_WORKERS, slow_factor=SLOW),
+                         pattern, seed=SEED)
+    return build_schedule(sched, timing, T)
+
+
+def _fixture_path(name: str, pattern: str) -> str:
+    return os.path.join(FIXTURE_DIR, f"{name}_{pattern}.json")
+
+
+def _to_record(s) -> dict:
+    return {
+        "workers": [int(w) for w in s.workers],
+        "assign_iters": [int(a) for a in s.assign_iters],
+        "unfinished_assign_iters": [int(a)
+                                    for a in s.unfinished_assign_iters],
+        "tau_max": s.tau_max(),
+        "tau_avg": s.tau_avg(),     # exact float64 repr round-trips JSON
+        "tau_c": s.tau_c(),
+        "wait_b": s.wait_b,
+    }
+
+
+@pytest.mark.parametrize("name,pattern", PAIRS,
+                         ids=[f"{s}-{p}" for s, p in PAIRS])
+def test_schedule_matches_golden_trace(name, pattern):
+    path = _fixture_path(name, pattern)
+    assert os.path.exists(path), (
+        f"missing fixture {path}; regenerate with "
+        "`PYTHONPATH=src python tests/test_engine_golden.py --regen`")
+    with open(path) as f:
+        want = json.load(f)
+    got = _to_record(_build(name, pattern))
+    np.testing.assert_array_equal(got["workers"], want["workers"])
+    np.testing.assert_array_equal(got["assign_iters"], want["assign_iters"])
+    np.testing.assert_array_equal(got["unfinished_assign_iters"],
+                                  want["unfinished_assign_iters"])
+    assert got["tau_max"] == want["tau_max"]
+    assert got["tau_avg"] == want["tau_avg"]
+    assert got["tau_c"] == want["tau_c"]
+    assert got["wait_b"] == want["wait_b"]
+
+
+def test_build_schedule_is_deterministic():
+    """Two builds of the same spec must agree with themselves, not just the
+    fixture (guards against hidden global RNG state)."""
+    a = _to_record(_build("fedbuff", "poisson"))
+    b = _to_record(_build("fedbuff", "poisson"))
+    assert a == b
+
+
+def _regen():
+    os.makedirs(FIXTURE_DIR, exist_ok=True)
+    for name, pattern in PAIRS:
+        rec = _to_record(_build(name, pattern))
+        rec["_scenario"] = {"n_workers": N_WORKERS, "T": T, "seed": SEED,
+                            "slow_factor": SLOW,
+                            "wait_b": WAITING.get(name, 1)}
+        with open(_fixture_path(name, pattern), "w") as f:
+            json.dump(rec, f, indent=1)
+        print("wrote", _fixture_path(name, pattern))
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

@@ -1,0 +1,101 @@
+"""round_masks (vectorized scatter) and round_delay_scales metadata.
+
+``round_masks`` used to be an O(T) nested Python loop; it is now one
+``np.add.at`` scatter.  The loop stays here as the oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (PATTERNS, REGISTRY, TimingModel, build_schedule,
+                        heterogeneous_speeds, make_scheduler, round_masks,
+                        round_delay_scales)
+
+
+def _loop_round_masks(schedule, n_rounds=None):
+    """The pre-vectorization implementation, kept verbatim as oracle."""
+    b = schedule.wait_b
+    total_rounds = schedule.T // b
+    if n_rounds is None:
+        n_rounds = total_rounds
+    n_rounds = min(n_rounds, total_rounds)
+    masks = np.zeros((n_rounds, schedule.n_workers), dtype=np.float32)
+    for q in range(n_rounds):
+        for t in range(q * b, (q + 1) * b):
+            masks[q, schedule.workers[t]] += 1.0
+    return masks
+
+
+def _random_schedule(seed, n=7, T=60):
+    rng = np.random.default_rng(seed)
+    name = rng.choice(sorted(REGISTRY))
+    pattern = rng.choice(PATTERNS)
+    b = int(rng.integers(1, 4)) if name in ("pure_waiting", "fedbuff",
+                                            "minibatch") else 1
+    sched = make_scheduler(name, n, b=b, seed=seed)
+    timing = TimingModel(heterogeneous_speeds(n, slow_factor=5.0), pattern,
+                         seed=seed)
+    return build_schedule(sched, timing, T)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_round_masks_scatter_equals_loop(seed):
+    s = _random_schedule(seed)
+    np.testing.assert_array_equal(round_masks(s), _loop_round_masks(s))
+    # truncated variant too (n_rounds < total and > total)
+    np.testing.assert_array_equal(round_masks(s, 5), _loop_round_masks(s, 5))
+    np.testing.assert_array_equal(round_masks(s, 10 ** 6),
+                                  _loop_round_masks(s, 10 ** 6))
+
+
+def test_round_masks_duplicate_receipts_accumulate():
+    """A worker delivering k gradients in one round must get weight k (the
+    scatter must ACCUMULATE duplicate (round, worker) pairs, the classic
+    np.add.at-vs-fancy-indexing trap)."""
+    s = _random_schedule(3, n=3, T=40)
+    masks = round_masks(s)
+    assert masks.sum() == masks.shape[0] * s.wait_b
+    # with 3 workers and concurrency, some round repeats a worker eventually
+    loop = _loop_round_masks(s)
+    assert loop.max() == masks.max()
+
+
+def test_round_delay_scales_bounds_and_values():
+    s = _random_schedule(1)
+    scales = round_delay_scales(s)
+    rounds = s.T // s.wait_b
+    assert scales.shape == (rounds,)
+    assert scales.dtype == np.float32
+    assert np.all(scales > 0) and np.all(scales <= 1.0)
+    # spot-check the rule: scale_q = min(1, tau_c / (mean delay_q + 1))
+    tau_c = max(s.tau_c(), 1)
+    d = s.delays[: rounds * s.wait_b].reshape(rounds, s.wait_b).mean(axis=1)
+    np.testing.assert_allclose(
+        scales, np.minimum(1.0, tau_c / (d + 1.0)).astype(np.float32))
+
+
+def test_round_delay_scales_shift_matches_applied_gradient():
+    """With a delay_rounds-deep buffer, round q applies the gradient
+    RECEIVED at round q − delay_rounds (buffered delay_rounds more rounds):
+    the scale must follow that gradient, not round q's receipts."""
+    s = _random_schedule(2)
+    rounds = s.T // s.wait_b
+    base = round_delay_scales(s)                      # receipt-time taus
+    shifted = round_delay_scales(s, delay_rounds=1)
+    assert shifted.shape == (rounds,)
+    # gated first round: neutral full step
+    assert shifted[0] == 1.0
+    tau_c = max(s.tau_c(), 1)
+    d = s.delays[: rounds * s.wait_b].reshape(rounds, s.wait_b).mean(axis=1)
+    want = np.minimum(1.0, tau_c / (d[:-1] + 1.0 + 1.0)).astype(np.float32)
+    np.testing.assert_allclose(shifted[1:], want)
+    # and it is genuinely a shift, not a relabel of the unshifted rule
+    if rounds > 2 and not np.allclose(d[:-1], d[1:]):
+        assert not np.array_equal(shifted[1:], base[1:])
+
+
+def test_round_delay_scales_zero_delay_is_full_step():
+    """SGD-RR realises zero delays → every round runs at full γ."""
+    sched = make_scheduler("rr", 6, seed=0)
+    timing = TimingModel(heterogeneous_speeds(6), "fixed", seed=0)
+    s = build_schedule(sched, timing, 18)
+    assert np.all(round_delay_scales(s) == 1.0)

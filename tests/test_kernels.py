@@ -6,7 +6,10 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.async_update import async_update_pallas, fused_adam_pallas
+from repro.kernels.async_update import (async_update_pallas,
+                                        fused_adam_pallas,
+                                        fused_adam_delayed_pallas,
+                                        sgd_step_pallas)
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
 
@@ -87,6 +90,21 @@ def test_async_update_kernel(dtype, n):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [128 * 256 + 37, 100])
+def test_sgd_step_kernel(dtype, n):
+    """Swap-free SGD step: identical params-out as async_update, no buffer."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    p = jax.random.normal(ks[0], (n,), jnp.float32).astype(dtype)
+    g = jax.random.normal(ks[1], (n,), jnp.float32).astype(dtype)
+    got = sgd_step_pallas(p, g, lr=0.02, clip_scale=0.5, delay_scale=0.25,
+                          interpret=True)
+    want, _ = ref.reference_async_update(p, g, g, lr=0.02, clip_scale=0.5,
+                                         delay_scale=0.25)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("count", [1, 100])
 def test_fused_adam_kernel(dtype, count):
     n = 4096 + 17
@@ -105,6 +123,45 @@ def test_fused_adam_kernel(dtype, count):
                                    np.asarray(b, np.float32),
                                    rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
                                    atol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [4096 + 17, 333])
+def test_fused_adam_delayed_kernel(dtype, n):
+    """Delayed variant: stale gbuf drives the step, fresh g lands in gbuf'."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    p = jax.random.normal(ks[0], (n,), jnp.float32).astype(dtype)
+    m = jax.random.normal(ks[1], (n,), jnp.float32) * 0.1
+    v = jax.random.uniform(ks[2], (n,), jnp.float32) * 0.01
+    gb = jax.random.normal(ks[3], (n,), jnp.float32).astype(dtype)
+    g = jax.random.normal(ks[4], (n,), jnp.float32).astype(dtype)
+    got = fused_adam_delayed_pallas(p, m, v, gb, g, lr=1e-3, count=5,
+                                    clip_scale=0.5, weight_decay=0.01,
+                                    interpret=True)
+    want = ref.reference_fused_adam_delayed(
+        p, m, v, gb, g, lr=1e-3, beta1=0.9, beta2=0.95, eps=1e-8,
+        bc1=1 - 0.9 ** 5, bc2=1 - 0.95 ** 5, clip_scale=0.5,
+        weight_decay=0.01)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-6)
+    for a, b in zip(got[:3], want[:3]):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **tol)
+    # the buffer swap is a pure copy: bitwise
+    np.testing.assert_array_equal(np.asarray(got[3], np.float32),
+                                  np.asarray(want[3], np.float32))
+
+
+def test_fused_adam_delayed_ops_dispatch():
+    n = 777
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    p, gb, g = (jax.random.normal(k, (n,), jnp.float32) for k in ks[:3])
+    m = jnp.zeros((n,)); v = jnp.zeros((n,))
+    a = ops.fused_adam_delayed(p, m, v, gb, g, lr=1e-3, interpret=True)
+    b = ops.fused_adam_delayed(p, m, v, gb, g, lr=1e-3, use_kernel=False)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
