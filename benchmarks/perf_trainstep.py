@@ -5,10 +5,14 @@ Two modes:
 
 * default      — per-arch train_step wall time → ``perf.csv`` (legacy).
 * ``--ab``     — reference vs fused ``update_impl`` A/B on the SAME arch,
-  batch and state → ``BENCH_trainstep.json``.  On TPU the fused column is
-  the compiled Mosaic kernels (the number that matters); off-TPU it is the
-  Pallas interpreter, so treat the CPU "speedup" as a correctness artifact,
-  not a perf claim (the JSON records backend + impl so nobody misreads it).
+  batch and state → ``BENCH_trainstep.json``, PLUS a three-way
+  reference / per-leaf / pooled sweep of the ISOLATED delayed server
+  update → ``BENCH_update_apply.json`` (kernel-launch counts + wall
+  time: the pooled path issues O(n_dtypes) launches vs the per-leaf
+  path's O(n_leaves)).  On TPU the fused columns are the compiled Mosaic
+  kernels (the number that matters); off-TPU they are the Pallas
+  interpreter, so treat the CPU "speedup" as a correctness artifact, not
+  a perf claim (the JSONs record backend + impl so nobody misreads it).
 """
 from __future__ import annotations
 
@@ -33,7 +37,7 @@ def _mesh():
     return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
 
 
-def _batch_for(cfg, B, S, seed=0):
+def _batch_for(cfg, B, S):
     pipe = HeterogeneousTokenPipeline(DataConfig(cfg.vocab, S, B))
     from repro.models import batch_specs
     batch = {}
@@ -130,11 +134,107 @@ def run_ab(out: str = "experiments/figs", quick: bool = False, iters: int = 5,
     return payload
 
 
+def run_update_ab(out: str = "experiments/figs", quick: bool = False,
+                  iters: int = 20, archs=None):
+    """Three-way sweep of the ISOLATED delayed server update (eq. 2) on one
+    arch's real state tree: reference / per-leaf fused / pooled fused.
+
+    Writes ``BENCH_update_apply.json``: per arch the wall time of each impl
+    plus its pallas launch count — ``n_leaves`` kernels for the per-leaf
+    path, ``n_pools`` (= number of distinct param dtypes) for the pooled
+    path.  The launch-count column is the structural claim; the wall-time
+    column is only a perf claim on a TPU backend."""
+    import jax.random as jrandom
+    from repro.models import model as M
+    from repro.optim import (OptConfig, adam_init, build_layout, init_pools,
+                             pool_tree, pooled_delayed_apply,
+                             reference_delayed_apply, fused_delayed_apply)
+
+    os.makedirs(out, exist_ok=True)
+    if archs is None:
+        archs = ["qwen2-0.5b"] if quick else \
+            ["qwen2-0.5b", "deepseek-moe-16b", "mamba2-370m"]
+    fused_impl = resolve_update_impl("pallas")
+    interpret = fused_impl == "pallas_interpret"
+    cfg_opt = OptConfig(name="adam", lr=1e-3, clip_norm=1.0)
+    entries = []
+    for name in archs:
+        cfg = get_arch(name).reduced().with_(remat="none")
+        params = M.init_params(cfg, jrandom.PRNGKey(0))
+        leaves = jax.tree_util.tree_leaves(params)
+        grads = jax.tree_util.tree_map(
+            lambda p: jax.random.normal(jrandom.PRNGKey(1), p.shape,
+                                        jnp.float32).astype(p.dtype) * 1e-2
+            if p.ndim else jnp.asarray(1e-2, p.dtype), params)
+        gbuf = jax.tree_util.tree_map(jnp.zeros_like, params)
+        opt_state = adam_init(params)
+        lay = build_layout(params, 1)
+        pools = init_pools(lay, params)
+        g_pools = pool_tree(lay, grads)
+        count0 = jnp.zeros((), jnp.int32)
+
+        def time_fn(fn, *args):
+            o = fn(*args)                           # compile
+            jax.block_until_ready(jax.tree_util.tree_leaves(o)[0])
+            t0 = time.time()
+            for _ in range(iters):
+                o = fn(*args)
+            jax.block_until_ready(jax.tree_util.tree_leaves(o)[0])
+            return (time.time() - t0) / iters * 1e6
+
+        ref_us = time_fn(
+            jax.jit(lambda g, b, s, p: reference_delayed_apply(
+                g, b, s, p, cfg_opt)), grads, gbuf, opt_state, params)
+        leaf_us = time_fn(
+            jax.jit(lambda g, b, s, p: fused_delayed_apply(
+                g, b, s, p, cfg_opt, interpret=interpret)),
+            grads, gbuf, opt_state, params)
+        pooled_us = time_fn(
+            jax.jit(lambda g, pl_, c: pooled_delayed_apply(
+                g, pl_, c, cfg_opt, interpret=interpret)),
+            g_pools, pools, count0)
+        entry = {
+            "arch": name,
+            "n_leaves": len(leaves),
+            "n_pools": lay.n_pools,
+            "params": int(sum(int(np.prod(l.shape)) for l in leaves)),
+            "launches": {"reference": 0, "per_leaf": len(leaves),
+                         "pooled": lay.n_pools},
+            "reference_us": round(ref_us, 1),
+            "per_leaf_us": round(leaf_us, 1),
+            "pooled_us": round(pooled_us, 1),
+            "pooled_vs_per_leaf": round(leaf_us / pooled_us, 3),
+            "iters": iters,
+        }
+        entries.append(entry)
+        print(f"{name}: reference={ref_us:.0f}us "
+              f"per_leaf[{len(leaves)} launches]={leaf_us:.0f}us "
+              f"pooled[{lay.n_pools} launches]={pooled_us:.0f}us "
+              f"pooled_vs_per_leaf={entry['pooled_vs_per_leaf']}x")
+    payload = {
+        "bench": "update_apply_three_way",
+        "backend": jax.default_backend(),
+        "fused_impl": fused_impl,
+        "note": ("isolated delayed server update on the arch's real state "
+                 "tree; 'launches' counts pallas_calls per step (the "
+                 "structural O(n_leaves) → O(n_pools) claim).  Off-TPU the "
+                 "fused columns run the Pallas INTERPRETER: wall-time "
+                 "ratios are only perf claims on a TPU backend"),
+        "entries": entries,
+    }
+    path = os.path.join(out, "BENCH_update_apply.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ab", action="store_true",
                     help="reference-vs-fused update_impl A/B → "
-                         "BENCH_trainstep.json")
+                         "BENCH_trainstep.json + three-way update-apply "
+                         "sweep → BENCH_update_apply.json")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--out", default="experiments/figs")
@@ -144,6 +244,8 @@ def main():
     archs = args.archs.split(",") if args.archs else None
     if args.ab:
         run_ab(out=args.out, quick=args.quick, iters=args.iters, archs=archs)
+        run_update_ab(out=args.out, quick=args.quick,
+                      iters=max(args.iters, 5), archs=archs)
     else:
         for r in run(out=args.out, quick=args.quick):
             print(r)

@@ -191,7 +191,6 @@ class TrainerBackend:
         masks, schedule = self.masks_for(spec, n_groups)
         make_batch = self._make_batch_fn(cfg, job, n_groups, spec.seed)
         state = tr.init_state(jax.random.PRNGKey(spec.seed))
-        step = jax.jit(tr.train_step_fn())
 
         rounds = min(spec.T, masks.shape[0])
         # delay-adaptive: the per-round γ scale comes from the realised
@@ -205,6 +204,10 @@ class TrainerBackend:
             schedule, rounds,
             delay_rounds=1 if job.delay_rounds > 0 else 0) \
             if adaptive else None
+        # the production pjit entry point: explicit state shardings +
+        # buffer donation (not a bare jax.jit of the step fn)
+        step = tr.jit_train_step((job.global_batch, job.seq_len),
+                                 with_delay_scale=scales is not None)
         losses, grad_norms, metrics_rows = [], [], []
         for i in range(rounds):
             args = (state, make_batch(i), jnp.asarray(masks[i]))

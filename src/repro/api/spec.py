@@ -125,8 +125,11 @@ class TrainJob:
     opt: str = "adam"
     clip_norm: Optional[float] = 1.0
     #: how the server update executes: "reference" (tree of elementwise
-    #: jnp ops) | "pallas" (fused TPU kernels; off-TPU it degrades to
-    #: interpret) | "pallas_interpret" (same kernels, Pallas interpreter)
+    #: jnp ops) | "pallas" (fused per-leaf TPU kernels) |
+    #: "pallas_pooled" (whole state flattened into per-dtype pool buffers,
+    #: ONE kernel per dtype under shard_map — see repro.optim.pool) |
+    #: the "*_interpret" twins (same kernels, Pallas interpreter; compiled
+    #: impls degrade to these off-TPU with a one-time warning)
     update_impl: str = "reference"
 
     def make_arch(self):

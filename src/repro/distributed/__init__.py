@@ -1,9 +1,11 @@
 from .sharding import (Rules, DEFAULT_RULES, SEQ_PARALLEL_RULES, auto_rules,
                        logical_pspec, zero_pspec, tree_pspecs, tree_shardings,
-                       bytes_per_device)
+                       bytes_per_device, pool_axes, pool_shard_count,
+                       pooled_pspec)
 from .async_trainer import AsyncTrainer, AsyncConfig
 from .serve import Server, ServeConfig
 
 __all__ = ["Rules", "DEFAULT_RULES", "SEQ_PARALLEL_RULES", "auto_rules", "logical_pspec", "zero_pspec",
            "tree_pspecs", "tree_shardings", "bytes_per_device",
+           "pool_axes", "pool_shard_count", "pooled_pspec",
            "AsyncTrainer", "AsyncConfig", "Server", "ServeConfig"]

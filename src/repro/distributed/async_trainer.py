@@ -33,7 +33,11 @@ from ..models import model as M
 from ..models.specs import Spec, abstract_tree, axes_tree
 from ..optim import (OptConfig, adam_init, make_optimizer, make_delayed_apply,
                      global_norm, resolve_update_impl)
-from .sharding import Rules, DEFAULT_RULES, tree_pspecs, tree_shardings, zero_pspec, logical_pspec
+from ..optim.pool import (build_layout, init_pools, pool_tree, unpool_tree,
+                          pooled_delayed_apply, pooled_update)
+from .sharding import (Rules, DEFAULT_RULES, tree_pspecs, tree_shardings,
+                       zero_pspec, logical_pspec, pool_axes, pool_shard_count,
+                       pooled_pspec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +55,10 @@ class AsyncConfig:
 class AsyncTrainer:
     """Composable trainer: (arch config × scheduler) → pjit train_step."""
 
+    #: class-level default so partially-constructed trainers (tests build
+    #: bare instances for state_specs) read the tree layout
+    pooled = False
+
     def __init__(self, cfg: ArchConfig, mesh: Mesh,
                  opt: OptConfig = OptConfig(),
                  async_cfg: AsyncConfig = AsyncConfig(),
@@ -65,12 +73,47 @@ class AsyncTrainer:
         self.n_groups = int(np.prod([mesh.shape[a] for a in rules.data_axes
                                      if a in mesh.axis_names])) or 1
         self.update_impl = resolve_update_impl(opt.update_impl)
-        self._init_opt, self._update = make_optimizer(opt)
-        self._delayed_apply = make_delayed_apply(opt)
+        #: pooled impls flatten the whole state into per-dtype pool buffers
+        #: ONCE here (layout is static per arch × mesh); the update is then
+        #: one kernel per dtype pool under shard_map, not one per leaf
+        self.pooled = self.update_impl.startswith("pallas_pooled")
+        if self.pooled:
+            self._pool_interpret = self.update_impl.endswith("_interpret")
+            self.pool_axes = pool_axes(mesh, rules)
+            self.pool_layout = build_layout(
+                abstract_tree(M.param_specs(cfg)),
+                pool_shard_count(mesh, rules))
+        else:
+            self._init_opt, self._update = make_optimizer(opt)
+            self._delayed_apply = make_delayed_apply(opt)
 
     # ------------------------------------------------------------------ specs
+    def _pooled_state_specs(self):
+        """Pooled state as Specs: per dtype group one (n_shards, cols) pool
+        each for p (param dtype), m/v (f32) and — when delayed — gbuf."""
+        lay = self.pool_layout
+
+        def pspec_(dk, dtype):
+            return Spec((lay.n_shards, lay.cols[dk]), (None, None),
+                        "zeros", dtype)
+
+        pools = {}
+        for dk in lay.groups:
+            grp = {"p": pspec_(dk, dk), "m": pspec_(dk, "float32"),
+                   "v": pspec_(dk, "float32")}
+            if self.async_cfg.delay_rounds > 0:
+                grp["gbuf"] = pspec_(dk, dk)
+            pools[dk] = grp
+        return {
+            "pools": pools,
+            "opt": {"count": Spec((), (), "zeros", "int32")},
+            "step": Spec((), (), "zeros", "int32"),
+        }
+
     def state_specs(self):
         """State tree as Specs (drives both init and shardings)."""
+        if self.pooled:
+            return self._pooled_state_specs()
         pspecs = M.param_specs(self.cfg)
 
         def f32_like(s: Spec):
@@ -99,8 +142,21 @@ class AsyncTrainer:
         """Params/gbuf are 2D-sharded (model × data, FSDP-style) by default:
         at 314B even bf16 params exceed HBM if only tensor-parallel.  XLA
         inserts the per-layer all-gathers; their cost shows up in §Roofline
-        and is a §Perf lever."""
+        and is a §Perf lever.
+
+        Pooled impls: every pool buffer carries the pooled pspec (rows over
+        the data axes — each device owns its ZeRO shard of every leaf)."""
         specs = self.state_specs()
+        if self.pooled:
+            psh = NamedSharding(self.mesh, pooled_pspec(self.mesh, self.rules))
+            scal = NamedSharding(self.mesh, P())
+            return {
+                "pools": jax.tree_util.tree_map(
+                    lambda s: psh, specs["pools"],
+                    is_leaf=lambda x: isinstance(x, Spec)),
+                "opt": {"count": scal},
+                "step": scal,
+            }
         out = {
             "params": tree_shardings(specs["params"], self.mesh, self.rules,
                                      zero=fsdp_params),
@@ -121,6 +177,13 @@ class AsyncTrainer:
 
     def init_state(self, key):
         params = M.init_params(self.cfg, key)
+        if self.pooled:
+            return {
+                "pools": init_pools(self.pool_layout, params,
+                                    delayed=self.async_cfg.delay_rounds > 0),
+                "opt": {"count": jnp.zeros((), jnp.int32)},
+                "step": jnp.zeros((), jnp.int32),
+            }
         state = {
             "params": params,
             "opt": adam_init(params),
@@ -130,6 +193,16 @@ class AsyncTrainer:
             state["gbuf"] = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, p.dtype), params)
         return state
+
+    def params_of(self, state):
+        """Params tree view of a trainer state, whatever the layout
+        (identity on tree states, unpool on pooled states) — for
+        checkpoint/eval consumers that expect the tree."""
+        if self.pooled:
+            return unpool_tree(
+                self.pool_layout,
+                {dk: b["p"] for dk, b in state["pools"].items()})
+        return state["params"]
 
     # ------------------------------------------------------------- train step
     def _grad_shardings(self):
@@ -153,10 +226,29 @@ class AsyncTrainer:
         ``delay_rounds > 0`` the whole server update (eq. 2) — consume the
         stale ``gbuf``, step params/moments, buffer the fresh grads — is one
         :func:`repro.optim.make_delayed_apply` call, which the pallas
-        ``update_impl``s execute as one fused HBM pass per tile."""
+        ``update_impl``s execute as one fused HBM pass per tile.
+
+        Pooled impls keep the state in per-dtype pool buffers: params are
+        viewed back into the tree for the forward/backward pass (the
+        constraint to the per-leaf compute shardings is where XLA inserts
+        the FSDP-style gathers), the fresh grads are pooled once, and the
+        whole server update runs as one kernel per dtype pool under
+        shard_map over the mesh's data axes."""
         cfg, acfg = self.cfg, self.async_cfg
+        if self.pooled:
+            param_sh = tree_shardings(M.param_specs(cfg), self.mesh,
+                                      self.rules, zero=True)
+            pool_sh = NamedSharding(self.mesh,
+                                    pooled_pspec(self.mesh, self.rules))
 
         def step(state, batch, mask, delay_scale=None):
+            if self.pooled:
+                params = unpool_tree(
+                    self.pool_layout,
+                    {dk: b["p"] for dk, b in state["pools"].items()},
+                    shardings=param_sh)
+            else:
+                params = state["params"]
             bsz = batch["tokens"].shape[0]
             w = self._example_weights(mask.astype(jnp.float32), bsz)
 
@@ -178,7 +270,7 @@ class AsyncTrainer:
                     g_acc, l_acc, a_acc = carry
                     b_i, w_i = inp
                     (l, parts_i), g = jax.value_and_grad(
-                        lfn, has_aux=True)(state["params"], b_i, w_i)
+                        lfn, has_aux=True)(params, b_i, w_i)
                     g_acc = jax.tree_util.tree_map(
                         lambda a, x: a + x.astype(jnp.float32) / k, g_acc, g)
                     return (g_acc, l_acc + l / k, a_acc + parts_i["aux"] / k), None
@@ -187,20 +279,27 @@ class AsyncTrainer:
                 g0 = jax.tree_util.tree_map(
                     lambda p, s: jax.lax.with_sharding_constraint(
                         jnp.zeros(p.shape, jnp.float32), s),
-                    state["params"], gsh)
+                    params, gsh)
                 (g32, loss, aux), _ = jax.lax.scan(
                     acc_step, (g0, 0.0, 0.0), (mb, wb))
                 grads = jax.tree_util.tree_map(
-                    lambda g, p: g.astype(p.dtype), g32, state["params"])
+                    lambda g, p: g.astype(p.dtype), g32, params)
                 parts = {"ce": loss, "aux": aux}
             else:
                 (loss, parts), grads = jax.value_and_grad(
-                    lfn, has_aux=True)(state["params"], batch, w)
+                    lfn, has_aux=True)(params, batch, w)
             # ZeRO: reshard grads to the optimizer-state sharding before the
             # update (reduce-scatter) — clip/Adam f32 temps shrink by the
-            # data-axis factor, which is what makes 314B fit
-            grads = jax.tree_util.tree_map(
-                jax.lax.with_sharding_constraint, grads, self._grad_shardings())
+            # data-axis factor, which is what makes 314B fit.  The pooled
+            # path reshards straight into pool layout instead: one concat
+            # pass, constrained so each device materialises only its rows
+            if self.pooled:
+                grad_pools = pool_tree(self.pool_layout, grads,
+                                       sharding=pool_sh)
+            else:
+                grads = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, grads,
+                    self._grad_shardings())
 
             if delay_scale is not None:
                 lr_scale = jnp.asarray(delay_scale, jnp.float32)
@@ -212,25 +311,39 @@ class AsyncTrainer:
             # skip the very first round (empty buffer) via a smooth gate
             gate = jnp.where(
                 (state["step"] == 0) & (acfg.delay_rounds > 0), 0.0, 1.0)
-            if acfg.delay_rounds > 0:
+            if self.pooled:
+                apply = pooled_delayed_apply if acfg.delay_rounds > 0 \
+                    else pooled_update
+                new_pools, new_count, gnorm = apply(
+                    grad_pools, state["pools"], state["opt"]["count"],
+                    self.opt, lr_scale=lr_scale * gate, mesh=self.mesh,
+                    axes=self.pool_axes, interpret=self._pool_interpret)
+                new_state = {
+                    "pools": new_pools,
+                    "opt": {"count": new_count},
+                    "step": state["step"] + 1,
+                }
+            elif acfg.delay_rounds > 0:
                 # one fused apply: consume the stale buffer, write the fresh
                 # grads back (reference impl composes the same semantics)
                 new_params, new_gbuf, new_opt, gnorm = self._delayed_apply(
-                    grads, state["gbuf"], state["opt"], state["params"],
+                    grads, state["gbuf"], state["opt"], params,
                     self.opt, lr_scale=lr_scale * gate)
+                new_state = {
+                    "params": new_params,
+                    "opt": new_opt,
+                    "step": state["step"] + 1,
+                    "gbuf": new_gbuf,
+                }
             else:
                 new_params, new_opt, gnorm = self._update(
-                    grads, state["opt"], state["params"], self.opt,
+                    grads, state["opt"], params, self.opt,
                     lr_scale=lr_scale * gate)
-                new_gbuf = None
-
-            new_state = {
-                "params": new_params,
-                "opt": new_opt,
-                "step": state["step"] + 1,
-            }
-            if new_gbuf is not None:
-                new_state["gbuf"] = new_gbuf
+                new_state = {
+                    "params": new_params,
+                    "opt": new_opt,
+                    "step": state["step"] + 1,
+                }
             metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
                        "grad_norm": gnorm,
                        "participation": jnp.mean(mask.astype(jnp.float32))}
@@ -239,16 +352,24 @@ class AsyncTrainer:
         from .sharding import sharded_trace
         return sharded_trace(step, self.mesh, self.rules)
 
-    def jit_train_step(self, batch_shape, donate: bool = True):
-        """pjit-compiled train step for a (batch, seq) shape."""
+    def jit_train_step(self, batch_shape, donate: bool = True,
+                       with_delay_scale: bool = False):
+        """pjit-compiled train step for a (batch, seq) shape.
+
+        ``with_delay_scale=True`` compiles the 4-arg signature
+        ``step(state, batch, mask, delay_scale)`` (the per-round stepsize
+        scale as a replicated traced scalar) — without it the step must be
+        called with exactly (state, batch, mask)."""
         bspecs = M.batch_specs(self.cfg, *batch_shape)
         batch_sh = tree_shardings(bspecs, self.mesh, self.rules)
         state_sh = self.state_shardings()
         mask_sh = NamedSharding(self.mesh, P())
-        out_metrics_sh = NamedSharding(self.mesh, P())
+        in_sh = (state_sh, batch_sh, mask_sh)
+        if with_delay_scale:
+            in_sh = in_sh + (NamedSharding(self.mesh, P()),)
         fn = jax.jit(
             self.train_step_fn(),
-            in_shardings=(state_sh, batch_sh, mask_sh),
+            in_shardings=in_sh,
             out_shardings=(state_sh, None),
             donate_argnums=(0,) if donate else (),
         )

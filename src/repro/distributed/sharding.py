@@ -197,6 +197,31 @@ def zero_pspec(axes, shape, mesh: Mesh, base: P,
     return base
 
 
+def pool_axes(mesh: Mesh, rules: Rules = DEFAULT_RULES) -> tuple:
+    """The mesh data axes a pooled state buffer shards over (the ZeRO
+    domain), in rules order."""
+    return tuple(a for a in rules.data_axes if a in mesh.axis_names)
+
+
+def pool_shard_count(mesh: Mesh, rules: Rules = DEFAULT_RULES) -> int:
+    """Row count of the pooled ``(n_shards, cols)`` buffers: one row per
+    ZeRO shard (1 on data-parallel-free meshes)."""
+    return int(np.prod([mesh.shape[a] for a in pool_axes(mesh, rules)],
+                       dtype=int)) or 1
+
+
+def pooled_pspec(mesh: Mesh, rules: Rules = DEFAULT_RULES) -> P:
+    """PartitionSpec of a pooled ``(n_shards, cols)`` state buffer: rows
+    over the data axes (each device owns its ZeRO shard of EVERY leaf),
+    columns unsharded.  Replicated over the model axis — pooling trades the
+    per-leaf 2D model×data sharding for O(n_dtypes) kernel launches; see
+    the README for when to pick which."""
+    axes = pool_axes(mesh, rules)
+    if not axes:
+        return P(None, None)
+    return P(axes if len(axes) > 1 else axes[0], None)
+
+
 def tree_pspecs(spec_tree, mesh: Mesh, rules: Rules = DEFAULT_RULES,
                 zero: bool = False):
     """Map a Spec tree → PartitionSpec tree."""

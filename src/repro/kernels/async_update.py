@@ -12,6 +12,9 @@ whole update into ONE pass per tile:
 * ``fused_adam_delayed``: ``fused_adam`` on the stale buffer PLUS the
   gbuf' = g swap in the same grid — the ``delay_rounds > 0`` production
   apply behind ``repro.optim.make_delayed_apply``.
+* ``sgd_momentum_step`` / ``sgd_momentum_delayed``: heavy-ball SGD with the
+  f32 momentum buffer riding the same HBM pass (m' = μ·m + clip·g;
+  p' = p − lr·scale·m'), the latter with the gbuf' = g swap fused in.
 
 Tiling: flat parameter tensors are viewed as (rows, LANE) with LANE=128
 (the TPU lane width); BlockSpec tiles (block_rows, 128) keep each operand
@@ -121,6 +124,111 @@ def sgd_step_pallas(params, grads, *, lr, clip_scale=1.0, delay_scale=1.0,
         interpret=interpret,
     )(eff, p2, g2)
     return p_new.ravel()[:params.size].reshape(shape)
+
+
+def _sgd_momentum_kernel(scal_ref, p_ref, m_ref, g_ref, p_out, m_out,
+                         *, momentum):
+    lr_eff = scal_ref[0]          # lr · delay_scale
+    clip = scal_ref[1]
+    m = momentum * m_ref[...] + clip * g_ref[...].astype(F32)
+    p_out[...] = (p_ref[...].astype(F32) - lr_eff * m).astype(p_out.dtype)
+    m_out[...] = m
+
+
+def sgd_momentum_step_pallas(params, m, grads, *, lr, momentum,
+                             clip_scale=1.0, delay_scale=1.0, block_rows=256,
+                             interpret=False):
+    """Fused heavy-ball SGD on one flat tensor: m' = μ·m + clip·g,
+    p' = p − lr·delay_scale·m'.  m is f32.  Returns (p', m')."""
+    assert params.shape == grads.shape == m.shape
+    shape, dtype = params.shape, params.dtype
+    p2, tiles = _pad_to_tiles(params, block_rows)
+    m2, _ = _pad_to_tiles(m.astype(F32), block_rows)
+    g2, _ = _pad_to_tiles(grads, block_rows)
+    scal = jnp.stack([jnp.asarray(lr * delay_scale, F32),
+                      jnp.asarray(clip_scale, F32)])
+
+    kern = functools.partial(_sgd_momentum_kernel, momentum=momentum)
+    p_new, m_new = pl.pallas_call(
+        kern,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p2.shape, dtype),
+            jax.ShapeDtypeStruct(m2.shape, F32),
+        ],
+        interpret=interpret,
+    )(scal, p2, m2, g2)
+    n = params.size
+    return (p_new.ravel()[:n].reshape(shape),
+            m_new.ravel()[:n].reshape(shape))
+
+
+def _sgd_momentum_delayed_kernel(scal_ref, p_ref, m_ref, gb_ref, g_ref,
+                                 p_out, m_out, gbuf_out, *, momentum):
+    lr_eff = scal_ref[0]
+    clip = scal_ref[1]
+    m = momentum * m_ref[...] + clip * gb_ref[...].astype(F32)
+    p_out[...] = (p_ref[...].astype(F32) - lr_eff * m).astype(p_out.dtype)
+    m_out[...] = m
+    gbuf_out[...] = g_ref[...].astype(gbuf_out.dtype)
+
+
+def sgd_momentum_delayed_pallas(params, m, gbuf, grads, *, lr, momentum,
+                                clip_scale=1.0, delay_scale=1.0,
+                                block_rows=256, interpret=False):
+    """Delayed-buffer heavy-ball SGD, one HBM pass per tile:
+
+        m'    ← μ·m + clip·gbuf        (momentum on the STALE gradient)
+        p'    ← p − lr·delay_scale·m'
+        gbuf' ← g                      (buffer the fresh one)
+
+    Returns (p', m', gbuf')."""
+    assert params.shape == gbuf.shape == grads.shape == m.shape
+    shape, dtype = params.shape, params.dtype
+    p2, tiles = _pad_to_tiles(params, block_rows)
+    m2, _ = _pad_to_tiles(m.astype(F32), block_rows)
+    b2, _ = _pad_to_tiles(gbuf, block_rows)
+    g2, _ = _pad_to_tiles(grads, block_rows)
+    scal = jnp.stack([jnp.asarray(lr * delay_scale, F32),
+                      jnp.asarray(clip_scale, F32)])
+
+    kern = functools.partial(_sgd_momentum_delayed_kernel, momentum=momentum)
+    p_new, m_new, gbuf_new = pl.pallas_call(
+        kern,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p2.shape, dtype),
+            jax.ShapeDtypeStruct(m2.shape, F32),
+            jax.ShapeDtypeStruct(b2.shape, grads.dtype),
+        ],
+        interpret=interpret,
+    )(scal, p2, m2, b2, g2)
+    n = params.size
+    return (p_new.ravel()[:n].reshape(shape),
+            m_new.ravel()[:n].reshape(shape),
+            gbuf_new.ravel()[:n].reshape(shape))
 
 
 def _adam_bias_corrections(beta1, beta2, count):

@@ -62,6 +62,24 @@ def reference_fused_adam_delayed(p, m, v, gbuf, g, *, lr, beta1, beta2, eps,
     return p_new, m_new, v_new, g
 
 
+def reference_sgd_momentum(p, m, g, *, lr, momentum, clip_scale=1.0,
+                           delay_scale=1.0):
+    """Fused heavy-ball step on flat arrays; m f32.  Returns (p', m')."""
+    m_new = momentum * m + clip_scale * g.astype(F32)
+    p_new = (p.astype(F32) - (lr * delay_scale) * m_new).astype(p.dtype)
+    return p_new, m_new
+
+
+def reference_sgd_momentum_delayed(p, m, gbuf, g, *, lr, momentum,
+                                   clip_scale=1.0, delay_scale=1.0):
+    """Delayed-buffer heavy-ball: stale gbuf drives the step, fresh g is
+    buffered.  Returns (p', m', gbuf')."""
+    p_new, m_new = reference_sgd_momentum(
+        p, m, gbuf, lr=lr, momentum=momentum, clip_scale=clip_scale,
+        delay_scale=delay_scale)
+    return p_new, m_new, g
+
+
 def reference_ssd_chunk(x, dt, A, B_, C_):
     """Single-chunk SSD (sequential recurrence oracle).
 

@@ -33,10 +33,15 @@ def main():
     ap.add_argument("--delay-rounds", type=int, default=1)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--update-impl", default="reference",
-                    choices=["reference", "pallas", "pallas_interpret"],
-                    help="server-update execution: fused Pallas kernels "
-                         "('pallas'; off-TPU degrades to interpret) or the "
-                         "reference elementwise path")
+                    choices=["reference", "pallas", "pallas_interpret",
+                             "pallas_pooled", "pallas_pooled_interpret"],
+                    help="server-update execution: the reference elementwise "
+                         "path, fused per-leaf Pallas kernels ('pallas'), or "
+                         "the pooled-state path ('pallas_pooled': whole "
+                         "state in per-dtype pool buffers, ONE kernel per "
+                         "dtype under shard_map over the data axes); "
+                         "compiled impls degrade to *_interpret off-TPU "
+                         "with a warning")
     ap.add_argument("--delay-adaptive", action="store_true",
                     help="per-round stepsize scale from the schedule's "
                          "delay metadata (removes the tau_max dependence)")

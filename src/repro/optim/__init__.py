@@ -1,12 +1,21 @@
 from .optimizers import (
     adam_init, adam_update, sgd_update, global_norm, clip_by_global_norm,
-    clip_scale_by_global_norm, OptConfig, make_optimizer, make_delayed_apply,
+    clip_scale_by_global_norm, clip_scale_from_norm, OptConfig,
+    make_optimizer, make_delayed_apply,
     reference_delayed_apply, fused_delayed_apply, fused_adam_update,
     fused_sgd_update, resolve_update_impl, UPDATE_IMPLS,
 )
+from .pool import (
+    LeafSlot, PoolLayout, build_layout, init_pools, pool_tree, unpool_tree,
+    pool_zeros, pooled_global_norm, pooled_update, pooled_delayed_apply,
+)
 
 __all__ = ["adam_init", "adam_update", "sgd_update", "global_norm",
-           "clip_by_global_norm", "clip_scale_by_global_norm", "OptConfig",
+           "clip_by_global_norm", "clip_scale_by_global_norm",
+           "clip_scale_from_norm", "OptConfig",
            "make_optimizer", "make_delayed_apply", "reference_delayed_apply",
            "fused_delayed_apply", "fused_adam_update", "fused_sgd_update",
-           "resolve_update_impl", "UPDATE_IMPLS"]
+           "resolve_update_impl", "UPDATE_IMPLS",
+           "LeafSlot", "PoolLayout", "build_layout", "init_pools", "pool_tree",
+           "unpool_tree", "pool_zeros", "pooled_global_norm",
+           "pooled_update", "pooled_delayed_apply"]

@@ -7,14 +7,17 @@
 * ``update_impl`` selects HOW the step executes: ``"reference"`` is the
   tree-of-elementwise jnp path; ``"pallas"`` routes every leaf through the
   fused server-update kernels in :mod:`repro.kernels.async_update` (one HBM
-  pass per tile); ``"pallas_interpret"`` is the same kernels under the
-  Pallas interpreter (CPU-correct, the CI parity vehicle).  ``"pallas"``
-  silently degrades to ``"pallas_interpret"`` off-TPU, see
-  :func:`resolve_update_impl`.
+  pass per tile); ``"pallas_pooled"`` flattens the whole state into
+  per-dtype pool buffers (see :mod:`repro.optim.pool`) so the update is ONE
+  kernel per dtype instead of one per leaf; the ``*_interpret`` variants
+  are the same kernels under the Pallas interpreter (CPU-correct, the CI
+  parity vehicle).  Compiled impls degrade to their interpreter twin
+  off-TPU — with a one-time warning — see :func:`resolve_update_impl`.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional
 
@@ -23,22 +26,39 @@ import jax.numpy as jnp
 
 F32 = jnp.float32
 
-UPDATE_IMPLS = ("reference", "pallas", "pallas_interpret")
+UPDATE_IMPLS = ("reference", "pallas", "pallas_interpret",
+                "pallas_pooled", "pallas_pooled_interpret")
+
+#: compiled impl → its interpreter twin (the off-TPU degradation target)
+_INTERPRET_TWIN = {"pallas": "pallas_interpret",
+                   "pallas_pooled": "pallas_pooled_interpret"}
+
+_degrade_warned: set = set()
 
 
 def resolve_update_impl(impl: str) -> str:
     """Map the requested impl to what this host can execute.
 
-    ``"pallas"`` compiles Mosaic TPU kernels; on CPU/GPU backends the same
-    kernels run under the Pallas interpreter instead, so requesting
-    ``"pallas"`` off-TPU degrades to ``"pallas_interpret"`` (identical
-    numerics, no compile).  ``"reference"``/``"pallas_interpret"`` pass
-    through unchanged."""
+    ``"pallas"``/``"pallas_pooled"`` compile Mosaic TPU kernels; on CPU/GPU
+    backends the same kernels run under the Pallas interpreter instead, so
+    requesting a compiled impl off-TPU degrades to its ``*_interpret`` twin
+    (identical numerics, no compile) and emits a one-time warning — an
+    interpreter-speed production run should be diagnosable, not silent.
+    ``"reference"``/``"*_interpret"`` pass through unchanged."""
     if impl not in UPDATE_IMPLS:
         raise ValueError(
             f"unknown update_impl {impl!r}; want one of {UPDATE_IMPLS}")
-    if impl == "pallas" and jax.default_backend() != "tpu":
-        return "pallas_interpret"
+    if impl in _INTERPRET_TWIN and jax.default_backend() != "tpu":
+        degraded = _INTERPRET_TWIN[impl]
+        if impl not in _degrade_warned:
+            _degrade_warned.add(impl)
+            warnings.warn(
+                f"update_impl={impl!r} needs a TPU backend; this host is "
+                f"{jax.default_backend()!r}, degrading to {degraded!r} "
+                "(Pallas INTERPRETER — correct numerics at interpreter "
+                "speed, not a production configuration)",
+                RuntimeWarning, stacklevel=2)
+        return degraded
     return impl
 
 
@@ -62,9 +82,18 @@ def global_norm(tree) -> jax.Array:
 
 def clip_by_global_norm(tree, max_norm: float):
     norm = global_norm(tree)
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12)).astype(F32)
+    scale = clip_scale_from_norm(norm, max_norm)
     return jax.tree_util.tree_map(
         lambda g: (g.astype(F32) * scale).astype(g.dtype), tree), norm
+
+
+def clip_scale_from_norm(norm, max_norm: Optional[float]) -> jax.Array:
+    """The global-norm clip factor from an already-computed norm — the one
+    source of truth for the formula (reference, per-leaf and pooled paths
+    must agree on the epsilon or parity drifts)."""
+    if not max_norm:
+        return jnp.asarray(1.0, F32)
+    return jnp.minimum(1.0, max_norm / (norm + 1e-12)).astype(F32)
 
 
 def clip_scale_by_global_norm(tree, max_norm: Optional[float]):
@@ -72,9 +101,7 @@ def clip_scale_by_global_norm(tree, max_norm: Optional[float]):
     folds ``scale`` into the kernel's SMEM scalars instead of spending an
     extra HBM pass rescaling every leaf."""
     norm = global_norm(tree)
-    if not max_norm:
-        return jnp.asarray(1.0, F32), norm
-    return jnp.minimum(1.0, max_norm / (norm + 1e-12)).astype(F32), norm
+    return clip_scale_from_norm(norm, max_norm), norm
 
 
 def _tree_unzip(out, n: int):
@@ -168,19 +195,29 @@ def fused_adam_update(grads, opt_state, params, cfg: OptConfig, lr_scale=1.0,
 
 def fused_sgd_update(grads, opt_state, params, cfg: OptConfig, lr_scale=1.0,
                      *, interpret: bool):
-    """SGD through the swap-free ``sgd_step`` kernel (momentum falls back
-    to the reference tree path — no fused momentum kernel yet)."""
+    """SGD through the swap-free ``sgd_step`` kernel; with ``cfg.momentum``
+    the f32 momentum buffer rides the same HBM pass
+    (``sgd_momentum_step``)."""
+    clip_scale, gnorm = clip_scale_by_global_norm(grads, cfg.clip_norm)
+    count = opt_state["count"] + 1
     if cfg.momentum:
-        return sgd_update(grads, opt_state, params, cfg, lr_scale=lr_scale)
+        from ..kernels.async_update import sgd_momentum_step_pallas
+
+        out = jax.tree_util.tree_map(
+            lambda p, m, g: sgd_momentum_step_pallas(
+                p, m, g, lr=cfg.lr, momentum=cfg.momentum,
+                clip_scale=clip_scale, delay_scale=lr_scale,
+                interpret=interpret),
+            params, opt_state["m"], grads)
+        newp, m = _tree_unzip(out, 2)
+        return newp, {"m": m, "v": opt_state["v"], "count": count}, gnorm
     from ..kernels.async_update import sgd_step_pallas
 
-    clip_scale, gnorm = clip_scale_by_global_norm(grads, cfg.clip_norm)
     newp = jax.tree_util.tree_map(
         lambda p, g: sgd_step_pallas(
             p, g, lr=cfg.lr, clip_scale=clip_scale,
             delay_scale=lr_scale, interpret=interpret),
         params, grads)
-    count = opt_state["count"] + 1
     return newp, {"m": opt_state["m"], "v": opt_state["v"],
                   "count": count}, gnorm
 
@@ -220,9 +257,18 @@ def fused_delayed_apply(grads, gbuf, opt_state, params, cfg: OptConfig,
             params, gbuf, grads, opt_state["m"], opt_state["v"])
         newp, m, v, new_gbuf = _tree_unzip(out, 4)
         return newp, new_gbuf, {"m": m, "v": v, "count": count}, gnorm
-    if cfg.momentum:   # momentum-SGD keeps the reference tree path
-        return reference_delayed_apply(grads, gbuf, opt_state, params, cfg,
-                                       lr_scale=lr_scale)
+    if cfg.momentum:
+        from ..kernels.async_update import sgd_momentum_delayed_pallas
+
+        out = jax.tree_util.tree_map(
+            lambda p, m, gb, g: sgd_momentum_delayed_pallas(
+                p, m, gb, g, lr=cfg.lr, momentum=cfg.momentum,
+                clip_scale=clip_scale, delay_scale=lr_scale,
+                interpret=interpret),
+            params, opt_state["m"], gbuf, grads)
+        newp, m, new_gbuf = _tree_unzip(out, 3)
+        return newp, new_gbuf, {"m": m, "v": opt_state["v"],
+                                "count": count}, gnorm
     from ..kernels.async_update import async_update_pallas
 
     out = jax.tree_util.tree_map(
@@ -240,8 +286,17 @@ def make_optimizer(cfg: OptConfig):
 
     All impls share the state tree and the
     ``update(grads, opt_state, params, cfg, lr_scale) → (p', state', gnorm)``
-    contract; parity is gated by ``tests/test_optim_fused.py``."""
+    contract; parity is gated by ``tests/test_optim_fused.py``.
+
+    The ``pallas_pooled`` impls change the STATE LAYOUT (per-dtype pool
+    buffers instead of a tree) and therefore live outside this contract:
+    use :mod:`repro.optim.pool` (``AsyncTrainer`` routes there)."""
     impl = resolve_update_impl(cfg.update_impl)
+    if impl.startswith("pallas_pooled"):
+        raise ValueError(
+            f"update_impl={cfg.update_impl!r} pools the state into per-dtype "
+            "buffers and cannot serve the tree-based optimizer contract; "
+            "use repro.optim.pool (AsyncTrainer does this automatically)")
     if impl == "reference":
         if cfg.name == "adam":
             return adam_init, adam_update
@@ -263,8 +318,14 @@ def make_delayed_apply(cfg: OptConfig):
             → (new_params, new_gbuf, new_opt_state, gnorm)
 
     ``"reference"`` composes clip + update + python-side buffer swap;
-    the pallas impls fuse all three into the kernels."""
+    the pallas impls fuse all three into the kernels.  ``pallas_pooled``
+    operates on pooled state, not trees — see :mod:`repro.optim.pool`."""
     impl = resolve_update_impl(cfg.update_impl)
+    if impl.startswith("pallas_pooled"):
+        raise ValueError(
+            f"update_impl={cfg.update_impl!r} operates on pooled state; use "
+            "repro.optim.pool.pooled_delayed_apply (AsyncTrainer does this "
+            "automatically)")
     if impl == "reference":
         return reference_delayed_apply
     return partial(fused_delayed_apply, interpret=impl == "pallas_interpret")

@@ -133,21 +133,44 @@ def test_adam_weight_decay_and_no_clip_parity():
     _assert_params(pr, pf, jnp.float32)
 
 
-def test_sgd_momentum_falls_back_to_reference():
-    """Momentum-SGD has no fused kernel: the fused impl must produce the
-    reference result EXACTLY (it routes to the same code)."""
-    cfg_ref, cfg_fused = _pair("sgd", momentum=0.9)
+def test_sgd_momentum_fused_parity():
+    """Momentum-SGD runs the fused ``sgd_momentum_step`` kernel (m-buffer in
+    the same HBM pass): trajectory tracks the reference within FMA rounding,
+    m buffers included."""
+    cfg_ref, cfg_fused = _pair("sgd", momentum=0.9, clip_norm=1.0)
     init_r, upd_r = make_optimizer(cfg_ref)
     _, upd_f = make_optimizer(cfg_fused)
     pr = pf = _tree()
-    sr = sf = init_r(pr)
+    sr, sf = init_r(pr), init_r(pf)
     for step in range(3):
         g = _grads_like(pr, step)
-        pr, sr, _ = upd_r(g, sr, pr, cfg_ref)
-        pf, sf, _ = upd_f(g, sf, pf, cfg_fused)
-    for a, b in zip(jax.tree_util.tree_leaves((pr, sr)),
-                    jax.tree_util.tree_leaves((pf, sf))):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        pr, sr, gn_r = upd_r(g, sr, pr, cfg_ref, lr_scale=0.5)
+        pf, sf, gn_f = upd_f(g, sf, pf, cfg_fused, lr_scale=0.5)
+        np.testing.assert_array_equal(np.asarray(gn_r), np.asarray(gn_f))
+    _assert_state_close(sr, sf)
+    _assert_params(pr, pf, jnp.float32)
+
+
+def test_sgd_momentum_delayed_fused_parity():
+    """Delayed momentum-SGD: one kernel consumes the stale buffer, updates
+    the m-buffer, steps params AND swaps in the fresh grads (the last
+    reference-fallback in ``fused_delayed_apply`` is gone)."""
+    cfg_ref, cfg_fused = _pair("sgd", momentum=0.9, clip_norm=1.0)
+    apply_r = make_delayed_apply(cfg_ref)
+    apply_f = make_delayed_apply(cfg_fused)
+    init, _ = make_optimizer(cfg_ref)
+    pr = pf = _tree()
+    sr, sf = init(pr), init(pf)
+    br = bf = jax.tree_util.tree_map(jnp.zeros_like, pr)
+    for step in range(4):
+        g = _grads_like(pr, step)
+        pr, br, sr, gn_r = apply_r(g, br, sr, pr, cfg_ref, lr_scale=0.25)
+        pf, bf, sf, gn_f = apply_f(g, bf, sf, pf, cfg_fused, lr_scale=0.25)
+        np.testing.assert_array_equal(np.asarray(gn_r), np.asarray(gn_f))
+        for k in g:   # buffer swap is a pure copy: bitwise
+            np.testing.assert_array_equal(np.asarray(bf[k]), np.asarray(g[k]))
+    _assert_state_close(sr, sf)
+    _assert_params(pr, pf, jnp.float32)
 
 
 # ---------------------------------------------------------------------------
