@@ -1,7 +1,7 @@
 """Micro-benchmark: AsyncTrainer train_step / serve_step wall time on the
 reduced configs (CPU; TPU perf comes from §Roofline, not wall clock).
 
-Two modes:
+Three modes:
 
 * default      — per-arch train_step wall time → ``perf.csv`` (legacy).
 * ``--ab``     — reference vs fused ``update_impl`` A/B on the SAME arch,
@@ -13,6 +13,11 @@ Two modes:
   kernels (the number that matters); off-TPU they are the Pallas
   interpreter, so treat the CPU "speedup" as a correctness artifact, not
   a perf claim (the JSONs record backend + impl so nobody misreads it).
+* ``--dispatch-ab`` — eager per-round dispatch loop vs the
+  ``repro.runtime`` scan executor on one shared ``RunPlan`` at several
+  ``rounds_per_launch`` values → ``BENCH_runtime.json`` (rounds/s +
+  launch and host-sync counts; dispatch is host-side overhead, so this
+  ratio is meaningful on any backend).
 """
 from __future__ import annotations
 
@@ -229,14 +234,108 @@ def run_update_ab(out: str = "experiments/figs", quick: bool = False,
     return payload
 
 
+def run_dispatch_ab(out: str = "experiments/figs", quick: bool = False,
+                    rounds: int = 0, arch: str = "qwen2-0.5b"):
+    """Eager per-round loop vs scan whole-run executor on ONE plan.
+
+    Times the WARM dispatch path — plan slicing, device batch synthesis,
+    step launch, metric readback, compiled executables held in a
+    ``PlanExecutor`` — at several ``rounds_per_launch`` values and writes
+    ``BENCH_runtime.json`` (rounds/s + launch and host-sync counts).
+    Every row runs the SAME ``RunPlan`` and step function, so the delta
+    is pure dispatch: the eager loop pays one Python dispatch, one batch
+    launch and one device→host metric sync per ROUND, the scan executor
+    pays them once per CHUNK.  Dispatch overhead is a host-side cost, so
+    unlike the kernel A/Bs this ratio is meaningful on any backend (the
+    JSON records the backend regardless).  The bench arch is deliberately
+    small: dispatch overhead is a per-round constant, so the config keeps
+    per-round compute comparable to it (at 100×-larger steps the same
+    absolute win disappears into the compute — record, don't infer)."""
+    import jax.random as jrandom
+    from repro.api import ExperimentSpec, TrainJob, TrainerBackend
+    from repro.runtime import PlanExecutor, compile_plan
+
+    os.makedirs(out, exist_ok=True)
+    mesh = _mesh()
+    # 64 rounds even in --quick: the timed window must dwarf scheduler
+    # jitter (compile time dominates the bench's wall clock either way)
+    rounds = rounds or 64
+    ks = [1, 8] if quick else [1, 4, 8, 16]
+    job = TrainJob(arch=arch, global_batch=8, seq_len=16,
+                   arch_overrides=(("n_layers", 1), ("d_model", 64),
+                                   ("d_ff", 128)))
+    spec = ExperimentSpec(scheduler="shuffled", timing="poisson:slow=6",
+                          objective=job, T=rounds, n_workers=4,
+                          stepsize=3e-3, seed=0)
+    cfg = job.make_arch()
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    plan = compile_plan(schedule, job, rounds=rounds, n_groups=4, seed=0)
+    tr = AsyncTrainer(cfg, mesh, opt=OptConfig(lr=3e-3, clip_norm=1.0),
+                      async_cfg=AsyncConfig(delay_rounds=1))
+    tr.n_groups = 4
+    ex = PlanExecutor(tr, plan, donate=False)
+
+    def timed(fn):
+        fn(tr.init_state(jrandom.PRNGKey(0)))     # compile + warm caches
+        best, r = None, None
+        for _ in range(3):                        # min-of-3: dispatch noise
+            t0 = time.time()
+            r = fn(tr.init_state(jrandom.PRNGKey(0)))
+            dt = time.time() - t0
+            best = dt if best is None else min(best, dt)
+        return best, r
+
+    entries = []
+    eager_s, r_e = timed(ex.run_eager)
+    entries.append({"runtime": "eager", "rounds_per_launch": 1,
+                    "seconds": round(eager_s, 4),
+                    "rounds_per_s": round(rounds / eager_s, 2),
+                    "launches": r_e.launches, "host_syncs": r_e.host_syncs})
+    print(f"eager: {rounds / eager_s:.1f} rounds/s "
+          f"({r_e.host_syncs} host syncs)")
+    for k in ks:
+        scan_s, r_s = timed(
+            lambda s, k=k: ex.run_scan(s, rounds_per_launch=k))
+        entries.append({"runtime": "scan", "rounds_per_launch": k,
+                        "seconds": round(scan_s, 4),
+                        "rounds_per_s": round(rounds / scan_s, 2),
+                        "launches": r_s.launches,
+                        "host_syncs": r_s.host_syncs,
+                        "speedup_vs_eager": round(eager_s / scan_s, 3)})
+        print(f"scan K={k}: {rounds / scan_s:.1f} rounds/s "
+              f"({r_s.host_syncs} host syncs, "
+              f"{eager_s / scan_s:.2f}x vs eager)")
+    payload = {
+        "bench": "runtime_dispatch_ab",
+        "backend": jax.default_backend(),
+        "arch": arch, "rounds": rounds,
+        "note": ("same RunPlan + step function for every row; only the "
+                 "dispatch layer differs.  host_syncs counts device→host "
+                 "metric transfers (eager: one per round; scan: one per "
+                 "chunk)"),
+        "entries": entries,
+    }
+    path = os.path.join(out, "BENCH_runtime.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ab", action="store_true",
                     help="reference-vs-fused update_impl A/B → "
                          "BENCH_trainstep.json + three-way update-apply "
                          "sweep → BENCH_update_apply.json")
+    ap.add_argument("--dispatch-ab", action="store_true",
+                    help="eager per-round loop vs scan whole-run executor "
+                         "at several rounds_per_launch → BENCH_runtime.json")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="dispatch A/B: rounds per timed run (0 = 64; "
+                         "--quick only trims the K sweep, not the rounds)")
     ap.add_argument("--out", default="experiments/figs")
     ap.add_argument("--archs", default=None,
                     help="comma-separated arch names (A/B mode)")
@@ -246,7 +345,10 @@ def main():
         run_ab(out=args.out, quick=args.quick, iters=args.iters, archs=archs)
         run_update_ab(out=args.out, quick=args.quick,
                       iters=max(args.iters, 5), archs=archs)
-    else:
+    if args.dispatch_ab:
+        run_dispatch_ab(out=args.out, quick=args.quick, rounds=args.rounds,
+                        arch=(archs[0] if archs else "qwen2-0.5b"))
+    if not (args.ab or args.dispatch_ab):
         for r in run(out=args.out, quick=args.quick):
             print(r)
 

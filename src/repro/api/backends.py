@@ -5,9 +5,12 @@
   single batched scan (:func:`repro.core.simulator.replay_grid`): the
   schedule is gradient-value-independent, so rebuilding it per γ — what the
   benchmarks used to do — is pure waste.
-* :class:`TrainerBackend` — schedule → participation ``round_masks`` →
-  ``AsyncTrainer`` pjit loop (production tier).  Same schedulers, identical
-  ordering by construction.
+* :class:`TrainerBackend` — schedule → device-resident
+  :class:`repro.runtime.RunPlan` → ``AsyncTrainer`` steps through the
+  whole-run executor (production tier): ``runtime="scan"`` compiles K
+  rounds per XLA launch, ``runtime="eager"`` is the per-round parity
+  oracle.  Same schedulers as the simulator, identical ordering by
+  construction.
 * :class:`ServeBackend` — batched decoding through ``distributed.Server``.
 
 All three return a :class:`RunResult`.
@@ -20,9 +23,9 @@ from typing import Callable, Optional, Protocol, runtime_checkable
 import jax
 import numpy as np
 
-from ..core import (delay_adaptive_stepsizes, replay, replay_grid,
-                    round_delay_scales, round_masks)
+from ..core import delay_adaptive_stepsizes, replay, replay_grid, round_masks
 from ..core.trace import summarize
+from ..runtime import compile_plan, execute
 from .result import RunResult
 from .spec import ExperimentSpec, ServeJob, StepsizePolicy, TrainJob
 
@@ -97,20 +100,32 @@ class SimulatorBackend:
 
 
 class TrainerBackend:
-    """Schedule → round participation masks → ``AsyncTrainer`` pjit loop.
+    """Schedule → device-resident :class:`repro.runtime.RunPlan` →
+    ``AsyncTrainer`` steps, dispatched by the ``repro.runtime`` executor.
 
     ``mesh``/``rules`` default to this host's devices and the repo sharding
     rules; ``on_step(i, state, metrics)`` is invoked once per round (for
-    logging / checkpointing without owning the loop).
+    logging / checkpointing without owning the loop).  ``runtime`` selects
+    the dispatch layer: ``"scan"`` (default) compiles
+    ``rounds_per_launch`` rounds into one XLA launch (``on_step`` then
+    fires at chunk boundaries, with the end-of-chunk state); ``"eager"``
+    launches one round at a time — the parity oracle.  Constructor args
+    override the spec's ``runtime``/``rounds_per_launch`` fields; both
+    unset defaults to ``"scan"``.
     """
 
     name = "trainer"
+    default_runtime = "scan"
 
     def __init__(self, mesh=None, rules=None,
-                 on_step: Optional[Callable] = None):
+                 on_step: Optional[Callable] = None,
+                 runtime: Optional[str] = None,
+                 rounds_per_launch: Optional[int] = None):
         self.mesh = mesh
         self.rules = rules
         self.on_step = on_step
+        self.runtime = runtime
+        self.rounds_per_launch = rounds_per_launch
 
     # ---- pieces shared with tests -----------------------------------------
     @staticmethod
@@ -121,29 +136,13 @@ class TrainerBackend:
         schedule = spec.build_schedule(T=spec.T * sched.wait_b, n=n_groups)
         return round_masks(schedule), schedule
 
-    def _make_batch_fn(self, cfg, job: TrainJob, n_groups: int, seed: int):
-        import jax
-        import jax.numpy as jnp
-        from ..data import DataConfig, HeterogeneousTokenPipeline
-        from ..models import batch_specs
-
-        pipe = HeterogeneousTokenPipeline(DataConfig(
-            vocab=cfg.vocab, seq_len=job.seq_len,
-            global_batch=job.global_batch, n_groups=n_groups,
-            heterogeneity=job.heterogeneity, seed=seed))
-        specs = batch_specs(cfg, job.global_batch, job.seq_len)
-
-        def make_batch(i):
-            b = {"tokens": jnp.asarray(pipe.batch(i)["tokens"])}
-            for k, sp in specs.items():
-                if k != "tokens" and sp.dtype != "int32":  # stubbed modalities
-                    b[k] = jax.random.normal(jax.random.PRNGKey(i), sp.shape,
-                                             jnp.float32)
-                elif k == "tokens":
-                    b[k] = b[k][:, :sp.shape[1]]
-            return b
-
-        return make_batch
+    def resolve_runtime(self, spec: ExperimentSpec):
+        """(runtime, rounds_per_launch): constructor overrides spec,
+        both-unset → the scan default."""
+        runtime = self.runtime or spec.runtime or self.default_runtime
+        k = self.rounds_per_launch if self.rounds_per_launch is not None \
+            else spec.rounds_per_launch
+        return runtime, int(k)
 
     def run(self, spec: ExperimentSpec) -> RunResult:
         job = spec.objective
@@ -164,7 +163,6 @@ class TrainerBackend:
     def _run_single(self, spec: ExperimentSpec, job: TrainJob, lr: float,
                     adaptive: bool) -> RunResult:
         import jax
-        import jax.numpy as jnp
         from ..distributed import AsyncTrainer, AsyncConfig, DEFAULT_RULES
         from ..launch.mesh import make_host_mesh
         from ..optim import OptConfig
@@ -189,49 +187,37 @@ class TrainerBackend:
                 f"global_batch={job.global_batch}")
 
         masks, schedule = self.masks_for(spec, n_groups)
-        make_batch = self._make_batch_fn(cfg, job, n_groups, spec.seed)
         state = tr.init_state(jax.random.PRNGKey(spec.seed))
 
         rounds = min(spec.T, masks.shape[0])
-        # delay-adaptive: the per-round γ scale comes from the realised
-        # schedule's delay metadata and rides into the step (a traced
-        # scalar — one compile covers all rounds); the scale at round i
-        # belongs to the gradient APPLIED at i.  AsyncTrainer's gbuf is a
-        # single swapped-every-round buffer, so the realised extra
-        # staleness is exactly ONE round whenever delay_rounds > 0,
-        # whatever the nominal config value says
-        scales = round_delay_scales(
-            schedule, rounds,
-            delay_rounds=1 if job.delay_rounds > 0 else 0) \
-            if adaptive else None
-        # the production pjit entry point: explicit state shardings +
-        # buffer donation (not a bare jax.jit of the step fn)
-        step = tr.jit_train_step((job.global_batch, job.seq_len),
-                                 with_delay_scale=scales is not None)
-        losses, grad_norms, metrics_rows = [], [], []
-        for i in range(rounds):
-            args = (state, make_batch(i), jnp.asarray(masks[i]))
-            if scales is not None:
-                state, m = step(*args, jnp.float32(scales[i]))
-            else:
-                state, m = step(*args)
-            m = {k: float(v) for k, v in m.items()}
-            losses.append(m["loss"])
-            grad_norms.append(m["grad_norm"])
-            metrics_rows.append(m)
-            if self.on_step is not None:
-                self.on_step(i, state, m)
+        # the whole run lowered ONCE: round masks, per-round γ-scales (the
+        # delay-adaptive scale at round i belongs to the gradient APPLIED
+        # at i; AsyncTrainer's single swapped-every-round gbuf makes the
+        # realised extra staleness exactly one round whenever
+        # delay_rounds > 0), and the folded per-round data keys.  The
+        # executor replays plan slices with no per-round host work
+        plan = compile_plan(schedule, job, rounds=rounds, n_groups=n_groups,
+                            seed=spec.seed, adaptive=adaptive)
+        runtime, rounds_per_launch = self.resolve_runtime(spec)
+        exec_res = execute(tr, plan, state, runtime=runtime,
+                           rounds_per_launch=rounds_per_launch,
+                           on_step=self.on_step)
 
         return RunResult(
-            spec=spec, backend=self.name, x=state,
-            log_ts=np.arange(rounds), losses=np.asarray(losses),
-            grad_norms=np.asarray(grad_norms), gamma=lr,
-            schedule=schedule, trace=summarize(schedule),
+            spec=spec, backend=self.name, x=exec_res.state,
+            log_ts=np.arange(rounds),
+            losses=exec_res.metrics["loss"].astype(np.float64),
+            grad_norms=exec_res.metrics["grad_norm"].astype(np.float64),
+            gamma=lr, schedule=schedule, trace=summarize(schedule),
             seconds=time.time() - t0,
-            extra={"metrics": metrics_rows, "masks": masks,
+            extra={"metrics": exec_res.rows, "masks": masks,
                    "arch": cfg.name, "n_groups": n_groups,
                    "update_impl": tr.update_impl,
-                   "delay_scales": scales})
+                   "delay_scales": plan.delay_scales if adaptive else None,
+                   "runtime": runtime,
+                   "rounds_per_launch": rounds_per_launch,
+                   "launches": exec_res.launches,
+                   "host_syncs": exec_res.host_syncs})
 
 
 class ServeBackend:

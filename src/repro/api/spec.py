@@ -183,7 +183,15 @@ class ExperimentSpec:
     * ``objective`` — the functions f_i: a problem object exposing
       ``grad_fn``/``full_grad`` (simulator), a :class:`TrainJob` (trainer),
       or a :class:`ServeJob` (serve).
+    * ``runtime`` — how the trainer backend dispatches rounds:
+      ``"scan"`` (compiled whole-run executor, ``rounds_per_launch``
+      rounds per XLA launch — the default) or ``"eager"`` (one launch +
+      one host sync per round; the parity oracle).  ``None`` defers to the
+      backend's own default; simulator/serve backends ignore both fields,
+      so one spec object still describes any tier.
     """
+
+    RUNTIMES = (None, "scan", "eager")
 
     scheduler: str = "pure"
     timing: str = "fixed:slow=5"
@@ -196,10 +204,18 @@ class ExperimentSpec:
     log_every: int = 100
     speeds: Optional[tuple] = None      # explicit per-worker speeds override
     seed: int = 0
+    runtime: Optional[str] = None       # None → backend default ("scan")
+    rounds_per_launch: int = 8          # scan runtime: K rounds per launch
 
     def __post_init__(self):
         object.__setattr__(self, "stepsize",
                            StepsizePolicy.coerce(self.stepsize))
+        if self.runtime not in self.RUNTIMES:
+            raise ValueError(
+                f"unknown runtime {self.runtime!r}; want one of "
+                f"{[r for r in self.RUNTIMES if r]} (or None)")
+        if self.rounds_per_launch < 1:
+            raise ValueError("rounds_per_launch must be >= 1")
         if self.speeds is not None:
             object.__setattr__(self, "speeds",
                                tuple(float(s) for s in self.speeds))

@@ -17,7 +17,7 @@ from .schedulers import (
     make_scheduler,
     REGISTRY,
 )
-from .engine import (Schedule, build_schedule, round_masks,
+from .engine import (Schedule, build_schedule, lower_rounds, round_masks,
                      round_delay_scales)
 from .simulator import (replay, replay_grid, run_async_sgd,
                         delay_adaptive_stepsizes, ReplayResult)
@@ -28,7 +28,8 @@ __all__ = [
     "Scheduler", "PureAsync", "PureAsyncWaiting", "RandomAsync",
     "RandomAsyncWaiting", "ShuffledAsync", "MiniBatch", "RandomReshuffling",
     "make_scheduler", "REGISTRY",
-    "Schedule", "build_schedule", "round_masks", "round_delay_scales",
+    "Schedule", "build_schedule", "lower_rounds", "round_masks",
+    "round_delay_scales",
     "replay", "replay_grid", "run_async_sgd", "delay_adaptive_stepsizes",
     "ReplayResult",
     "theory", "trace",

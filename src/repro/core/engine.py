@@ -188,6 +188,27 @@ def round_masks(schedule: Schedule, n_rounds: int | None = None) -> np.ndarray:
     return masks
 
 
+def lower_rounds(schedule: Schedule, n_rounds: int | None = None, *,
+                 delay_rounds: int = 0, adaptive: bool = False):
+    """Lower a realised :class:`Schedule` to stacked per-round arrays.
+
+    Returns ``(masks, delay_scales)``: the ``(rounds, n)`` participation
+    masks and the ``(rounds,)`` stepsize scales — the delay-adaptive rule
+    from :func:`round_delay_scales` when ``adaptive``, all-ones otherwise
+    (so callers always have a dense per-round γ-scale to feed the traced
+    step).  This is the schedule→plan lowering primitive the
+    ``repro.runtime`` executor compiles against.
+    """
+    masks = round_masks(schedule, n_rounds)
+    rounds = masks.shape[0]
+    if adaptive:
+        scales = round_delay_scales(schedule, rounds,
+                                    delay_rounds=delay_rounds)
+    else:
+        scales = np.ones(rounds, dtype=np.float32)
+    return masks, scales
+
+
 def round_delay_scales(schedule: Schedule, n_rounds: int | None = None,
                        delay_rounds: int = 0) -> np.ndarray:
     """(rounds,) delay-adaptive stepsize scales from the realised schedule.

@@ -45,6 +45,15 @@ def main():
     ap.add_argument("--delay-adaptive", action="store_true",
                     help="per-round stepsize scale from the schedule's "
                          "delay metadata (removes the tau_max dependence)")
+    ap.add_argument("--runtime", default="scan", choices=["scan", "eager"],
+                    help="dispatch layer: 'scan' compiles "
+                         "--rounds-per-launch rounds into ONE XLA launch "
+                         "(host sync once per chunk); 'eager' launches one "
+                         "round at a time (the parity oracle)")
+    ap.add_argument("--rounds-per-launch", type=int, default=8,
+                    help="scan runtime: rounds per XLA launch; on_step "
+                         "logging and --ckpt-every barriers fire at these "
+                         "chunk boundaries")
     ap.add_argument("--sync", action="store_true")
     ap.add_argument("--host-mesh", action="store_true",
                     help="use this host's devices instead of the 16x16 pod")
@@ -83,13 +92,22 @@ def main():
     spec = ExperimentSpec(
         scheduler=scheduler, timing=f"{args.pattern}:slow=6",
         objective=job, T=args.steps, n_workers=args.n_groups or None,
-        stepsize=stepsize, seed=args.seed)
+        stepsize=stepsize, seed=args.seed, runtime=args.runtime,
+        rounds_per_launch=args.rounds_per_launch)
 
     print(f"arch={cfg.name} params={n_params(cfg)/1e6:.1f}M "
           f"mesh={dict(mesh.shape)} groups={args.n_groups or 'auto'} "
           f"scheduler={args.scheduler} b={args.wait_b} "
           f"delay={0 if args.sync else args.delay_rounds} "
-          f"update_impl={args.update_impl}")
+          f"update_impl={args.update_impl} runtime={args.runtime}"
+          + (f" K={args.rounds_per_launch}" if args.runtime == "scan" else ""))
+
+    if (args.runtime == "scan" and args.ckpt and args.ckpt_every
+            and args.ckpt_every % args.rounds_per_launch):
+        print(f"warning: --ckpt-every={args.ckpt_every} is not a multiple "
+              f"of --rounds-per-launch={args.rounds_per_launch}; scan "
+              f"checkpoints hold the END-of-chunk state, so off-boundary "
+              f"saves are mislabelled — align the two for exact resume")
 
     def on_step(i, state, m):
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:

@@ -1,0 +1,27 @@
+"""``repro.runtime`` — compiled whole-run execution.
+
+Two layers:
+
+* :mod:`~repro.runtime.plan` lowers a realised schedule + train job into a
+  device-resident :class:`RunPlan` (stacked round masks, per-round delay
+  scales, folded per-round PRNG data keys, static batch-synthesis tables),
+* :mod:`~repro.runtime.executor` replays the plan — ``runtime="scan"``
+  runs K rounds per XLA launch with ``jax.lax.scan`` (one host sync per
+  chunk), ``runtime="eager"`` is the one-launch-per-round parity oracle.
+
+``TrainerBackend`` drives both through :func:`execute`; they are also
+usable directly against any ``AsyncTrainer``::
+
+    plan = compile_plan(schedule, job, rounds=T, n_groups=n, seed=0)
+    res = execute(trainer, plan, trainer.init_state(key),
+                  runtime="scan", rounds_per_launch=16)
+"""
+from .plan import RunPlan, compile_plan, fold_data_keys
+from .executor import (METRICS, RUNTIMES, ExecResult, PlanExecutor, execute,
+                       make_batch_fn, run_eager, run_scan)
+
+__all__ = [
+    "RunPlan", "compile_plan", "fold_data_keys",
+    "METRICS", "RUNTIMES", "ExecResult", "PlanExecutor", "execute",
+    "make_batch_fn", "run_eager", "run_scan",
+]

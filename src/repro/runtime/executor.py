@@ -1,0 +1,270 @@
+"""Compiled whole-run executor: K rounds per XLA launch via ``lax.scan``.
+
+The eager dispatch loop pays three per-round costs the hardware never asked
+for: a Python dispatch of the jitted step, a host-built batch shipped to
+device, and a device→host sync to read the metrics.  This module removes
+all three — the :class:`RunPlan` is device-resident, batches are
+synthesised on device from the plan's folded PRNG keys, and metrics
+accumulate into an on-device ``(K, n_metrics)`` buffer (the stacked ys of
+the scan) that crosses to host ONCE per chunk.
+
+``rounds_per_launch`` (K) is the dispatch-vs-control-granularity trade-off:
+
+* K = 1 degenerates to eager dispatch (one launch per round),
+* K = rounds is one launch for the whole run (no callbacks until the end),
+* intermediate K keeps ``on_step`` callbacks and checkpoint barriers firing
+  every K rounds while amortising dispatch K×.
+
+:func:`run_eager` is the same plan executed one round per launch — the
+parity oracle the scan executor is gated against (same step function, same
+device-synthesised batches, same plan slices; only the dispatch differs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .plan import RunPlan
+
+#: fixed metric order of the on-device accumulator row; mirrors the dict
+#: returned by ``AsyncTrainer.train_step_fn``
+METRICS = ("loss", "ce", "aux", "grad_norm", "participation")
+
+
+@dataclasses.dataclass
+class ExecResult:
+    """Final carried state + per-round metric curves (host numpy)."""
+
+    state: object
+    metrics: dict            # name -> (rounds,) np.ndarray, keys = METRICS
+    launches: int = 0        # XLA dispatches issued
+    host_syncs: int = 0      # device→host metric transfers
+
+    @property
+    def rows(self) -> list:
+        """Metrics as one dict per round (the eager loop's legacy shape)."""
+        n = len(next(iter(self.metrics.values()))) if self.metrics else 0
+        return [{k: float(v[i]) for k, v in self.metrics.items()}
+                for i in range(n)]
+
+
+def make_batch_fn(plan: RunPlan, cfg) -> Callable:
+    """``batch_of(key) -> batch dict``, entirely on device.
+
+    Tokens: inverse-CDF Zipf draws (``searchsorted`` on the plan's
+    cumulative pmf) pushed through each group's vocab permutation — the
+    same marginal law and heterogeneity structure as the host
+    ``HeterogeneousTokenPipeline``, as a pure jittable function of the
+    round key.  Non-token modalities (vision patches / audio frames) are
+    the same stubbed normal draws the host path used, keyed per-modality
+    via ``fold_in``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from ..models import batch_specs
+
+    specs = batch_specs(cfg, plan.global_batch, plan.seq_len)
+    cdf = jnp.asarray(plan.token_cdf)
+    perms = jnp.asarray(plan.group_perms)
+    per = plan.global_batch // plan.n_groups
+    gidx = jnp.repeat(jnp.arange(plan.n_groups), per)
+
+    def batch_of(key):
+        out = {}
+        for j, (k, sp) in enumerate(sorted(specs.items())):
+            kj = jax.random.fold_in(key, j)
+            if sp.dtype == "int32":          # tokens (possibly shortened)
+                u = jax.random.uniform(kj, (plan.global_batch, sp.shape[1]))
+                ranks = jnp.clip(jnp.searchsorted(cdf, u), 0,
+                                 cdf.shape[0] - 1).astype(jnp.int32)
+                out[k] = perms[gidx[:, None], ranks]
+            else:                            # stubbed modality embeddings
+                out[k] = jax.random.normal(kj, sp.shape, jnp.float32)
+        return out
+
+    return batch_of
+
+
+def _metrics_row(m: dict):
+    import jax.numpy as jnp
+    return jnp.stack([jnp.asarray(m[k], jnp.float32) for k in METRICS])
+
+
+def _chunk_bounds(rounds: int, rounds_per_launch: int, start: int):
+    k = max(int(rounds_per_launch), 1)
+    lo = start
+    while lo < rounds:
+        hi = min(lo + k, rounds)
+        yield lo, hi
+        lo = hi
+
+
+
+class PlanExecutor:
+    """Holds the compiled artifacts for one (trainer × plan): build once,
+    run many.  The jitted chunk function is cached on the instance, so
+    repeated runs (benchmark warm timings, grid restarts, resumed runs)
+    pay tracing/compilation only on first use per chunk length — a fresh
+    closure per run would silently recompile every time.
+    """
+
+    def __init__(self, trainer, plan: RunPlan, *, donate: bool = True):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        self.trainer = trainer
+        self.plan = plan
+        self.donate = donate
+        self._batch_of = make_batch_fn(plan, trainer.cfg)
+        self._repl = NamedSharding(trainer.mesh, P())   # plan slices
+        self._eager = None           # lazily built parity-oracle pair
+
+        step = trainer.train_step_fn()
+        batch_of = self._batch_of
+        repl = self._repl
+
+        # only an ADAPTIVE plan carries a real per-round γ-scale; for a
+        # neutral plan the step is called 3-arg so the trainer's own
+        # static AsyncConfig.delay_adaptive rule stays in charge (an
+        # explicit all-ones scale would silently override it)
+        adaptive = plan.adaptive
+
+        def chunk(state, masks, keys, scales):
+            def body(st, xs):
+                mask, key, scale = xs
+                # pin the synthesised batch to replicated BEFORE the
+                # step's own constraints reshard it: otherwise GSPMD
+                # propagates the data-axis sharding back into the RNG
+                # ops, and legacy (non-partitionable) threefry generates
+                # DIFFERENT bits per shard than the replicated generation
+                # the eager oracle uses — 2% loss divergence, not FMA
+                # noise
+                batch = jax.tree_util.tree_map(
+                    lambda x: jax.lax.with_sharding_constraint(x, repl),
+                    batch_of(key))
+                st, m = step(st, batch, mask, scale) if adaptive \
+                    else step(st, batch, mask)
+                return st, _metrics_row(m)
+
+            return jax.lax.scan(body, state, (masks, keys, scales))
+
+        state_sh = trainer.state_shardings()
+        self._chunk_jit = jax.jit(
+            chunk,
+            in_shardings=(state_sh, repl, repl, repl),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,) if donate else ())
+
+    # ------------------------------------------------------------------ scan
+    def run_scan(self, state, *, rounds_per_launch: int = 8,
+                 on_step: Optional[Callable] = None,
+                 start_round: int = 0) -> ExecResult:
+        """Execute plan rounds ``[start_round, rounds)``, K per launch.
+
+        One XLA launch covers K = ``rounds_per_launch`` rounds; the
+        carried state is donated launch-to-launch (the chunk's input
+        buffers are reused, so state never doubles in memory).
+        ``on_step(i, state, metrics_i)`` fires for every completed
+        round — but only at chunk boundaries, with the END-of-chunk state
+        (checkpoint barriers therefore land on multiples of K; align
+        ``ckpt_every`` with K for exact-resume semantics).  A ragged tail
+        (``rounds % K != 0``) costs at most one extra compile for the
+        remainder length.
+
+        ``start_round > 0`` resumes mid-plan: the data keys are a pure
+        function of (seed, round), so a restored run regenerates the
+        identical batch stream.
+        """
+        plan = self.plan
+        rows, launches = [], 0
+        for lo, hi in _chunk_bounds(plan.rounds, rounds_per_launch,
+                                    start_round):
+            state, ms = self._chunk_jit(state, *plan.device_slices(lo, hi))
+            ms = np.asarray(ms)           # ONE host sync per chunk
+            rows.append(ms)
+            launches += 1
+            if on_step is not None:
+                for i in range(lo, hi):
+                    on_step(i, state,
+                            {k: float(v)
+                             for k, v in zip(METRICS, ms[i - lo])})
+        all_ms = np.concatenate(rows, axis=0) if rows else \
+            np.zeros((0, len(METRICS)), np.float32)
+        return ExecResult(
+            state=state,
+            metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
+            launches=launches, host_syncs=launches)
+
+    # ----------------------------------------------------------------- eager
+    def run_eager(self, state, *, on_step: Optional[Callable] = None,
+                  start_round: int = 0) -> ExecResult:
+        """The parity oracle: the same plan, one launch + one host sync
+        per round (the pre-runtime dispatch loop, kept as the semantic
+        reference)."""
+        import jax
+        import jax.numpy as jnp
+
+        plan = self.plan
+        if self._eager is None:
+            self._eager = (
+                jax.jit(self._batch_of),
+                self.trainer.jit_train_step(
+                    (plan.global_batch, plan.seq_len),
+                    donate=self.donate,
+                    with_delay_scale=plan.adaptive))
+        batch_of, step = self._eager
+        rows = []
+        for i in range(start_round, plan.rounds):
+            key = jnp.asarray(plan.data_keys[i])
+            args = (state, batch_of(key), jnp.asarray(plan.masks[i]))
+            if plan.adaptive:       # neutral plans: the trainer's own
+                args += (jnp.float32(plan.delay_scales[i]),)  # static rule
+            state, m = step(*args)
+            row = {k: float(m[k]) for k in METRICS}  # host sync per round
+            rows.append([row[k] for k in METRICS])
+            if on_step is not None:
+                on_step(i, state, row)
+        all_ms = np.asarray(rows, np.float32) if rows else \
+            np.zeros((0, len(METRICS)), np.float32)
+        n = all_ms.shape[0]
+        # per round the eager loop issues TWO dispatches: the batch-
+        # synthesis jit plus the step jit (the scan executor fuses
+        # synthesis into the chunk, so its count is launches-per-chunk)
+        return ExecResult(
+            state=state,
+            metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
+            launches=2 * n, host_syncs=n)
+
+
+def run_scan(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
+             on_step: Optional[Callable] = None, start_round: int = 0,
+             donate: bool = True) -> ExecResult:
+    """One-shot convenience over :meth:`PlanExecutor.run_scan` (compiles
+    fresh; hold a :class:`PlanExecutor` to reuse compiled chunks)."""
+    return PlanExecutor(trainer, plan, donate=donate).run_scan(
+        state, rounds_per_launch=rounds_per_launch, on_step=on_step,
+        start_round=start_round)
+
+
+def run_eager(trainer, plan: RunPlan, state, *,
+              on_step: Optional[Callable] = None, start_round: int = 0,
+              donate: bool = True) -> ExecResult:
+    """One-shot convenience over :meth:`PlanExecutor.run_eager`."""
+    return PlanExecutor(trainer, plan, donate=donate).run_eager(
+        state, on_step=on_step, start_round=start_round)
+
+
+RUNTIMES = {"scan": run_scan, "eager": run_eager}
+
+
+def execute(trainer, plan: RunPlan, state, *, runtime: str = "scan",
+            rounds_per_launch: int = 8, **kw) -> ExecResult:
+    """Dispatch on ``runtime`` (`"scan"` | `"eager"`)."""
+    if runtime not in RUNTIMES:
+        raise ValueError(
+            f"unknown runtime {runtime!r}; want one of {sorted(RUNTIMES)}")
+    if runtime == "scan":
+        kw["rounds_per_launch"] = rounds_per_launch
+    return RUNTIMES[runtime](trainer, plan, state, **kw)

@@ -1,0 +1,156 @@
+"""Schedule → device-resident execution plan.
+
+A realised :class:`repro.core.engine.Schedule` is host-side numpy: per
+*receipt* arrays of workers and assignment iterates.  The trainer consumes
+it one ROUND at a time — participation mask, stepsize scale, data batch —
+and the eager dispatch loop used to rebuild each of those on host every
+round, forcing a host↔device round trip per round.
+
+:func:`compile_plan` lowers the whole run ONCE into a :class:`RunPlan`:
+stacked per-round arrays (masks, delay scales, folded PRNG data keys) plus
+the static tables device-side batch synthesis needs (the Zipf inverse-CDF
+and the per-group vocab permutations of
+:class:`repro.data.HeterogeneousTokenPipeline`).  Everything in the plan is
+gradient-value-independent — the same observation that makes the exact
+simulator possible (engine.py docstring) makes the whole run compilable:
+``lax.scan`` can replay plan slices with zero host involvement.
+
+The plan is runtime-neutral: the scan executor scans it K rounds per XLA
+launch, the eager oracle indexes it one round at a time.  Both synthesise
+batches on device from the SAME per-round keys, which is what makes
+eager-vs-scan parity a meaningful gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import lower_rounds
+from ..core.engine import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class RunPlan:
+    """Device-ready lowering of one training run.
+
+    Per-round stacked arrays (row ``q`` drives round ``q``):
+
+    * ``masks`` — ``(rounds, n_groups)`` f32 participation masks,
+    * ``delay_scales`` — ``(rounds,)`` f32 per-round γ-scales (all ones
+      unless the spec's stepsize policy is delay-adaptive),
+    * ``data_keys`` — ``(rounds, 2)`` uint32 PRNG keys,
+      ``fold_in(PRNGKey(seed), q)``: the whole data stream in one array.
+
+    Static data-synthesis tables (host-computed once, device-resident for
+    the run):
+
+    * ``token_cdf`` — ``(vocab,)`` f32 cumulative Zipf pmf (inverse-CDF
+      sampling via ``searchsorted``),
+    * ``group_perms`` — ``(n_groups, vocab)`` int32 group-specific vocab
+      permutations (the heterogeneity ζ² knob).
+    """
+
+    masks: np.ndarray
+    delay_scales: np.ndarray
+    data_keys: np.ndarray
+    token_cdf: np.ndarray
+    group_perms: np.ndarray
+    global_batch: int
+    seq_len: int
+    seed: int
+    adaptive: bool = False
+
+    @property
+    def rounds(self) -> int:
+        return int(self.masks.shape[0])
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.masks.shape[1])
+
+    @property
+    def vocab(self) -> int:
+        return int(self.token_cdf.shape[0])
+
+    def __post_init__(self):
+        if self.masks.shape[0] != self.delay_scales.shape[0] or \
+                self.masks.shape[0] != self.data_keys.shape[0]:
+            raise ValueError(
+                f"per-round arrays disagree on rounds: masks "
+                f"{self.masks.shape}, delay_scales {self.delay_scales.shape},"
+                f" data_keys {self.data_keys.shape}")
+        if self.group_perms.shape != (self.n_groups, self.vocab):
+            raise ValueError(
+                f"group_perms {self.group_perms.shape} != "
+                f"(n_groups={self.n_groups}, vocab={self.vocab})")
+        if self.global_batch % self.n_groups:
+            raise ValueError(
+                f"the {self.n_groups} groups must divide "
+                f"global_batch={self.global_batch}")
+
+    # ------------------------------------------------------------------ views
+    def device_slices(self, lo: int = 0, hi: Optional[int] = None):
+        """``(masks, data_keys, delay_scales)`` rows ``[lo, hi)`` as device
+        arrays — the xs of one ``lax.scan`` launch."""
+        import jax.numpy as jnp
+
+        hi = self.rounds if hi is None else hi
+        return (jnp.asarray(self.masks[lo:hi]),
+                jnp.asarray(self.data_keys[lo:hi]),
+                jnp.asarray(self.delay_scales[lo:hi]))
+
+    def summary(self) -> dict:
+        return {"rounds": self.rounds, "n_groups": self.n_groups,
+                "vocab": self.vocab, "global_batch": self.global_batch,
+                "seq_len": self.seq_len, "seed": self.seed,
+                "adaptive": self.adaptive}
+
+
+def fold_data_keys(seed: int, rounds: int) -> np.ndarray:
+    """``(rounds, 2)`` uint32 — round q's batch key is
+    ``fold_in(PRNGKey(seed), q)``; a pure function of (seed, q), so a run
+    resumed at any round boundary regenerates the identical stream."""
+    import jax
+
+    key = jax.random.PRNGKey(seed)
+    keys = jax.vmap(lambda q: jax.random.fold_in(key, q))(
+        np.arange(rounds, dtype=np.uint32))
+    if jax.dtypes.issubdtype(keys.dtype, jax.dtypes.prng_key):  # typed keys
+        keys = jax.random.key_data(keys)
+    return np.asarray(keys, dtype=np.uint32)
+
+
+def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
+                 n_groups: Optional[int] = None, seed: int = 0,
+                 adaptive: bool = False) -> RunPlan:
+    """Lower ``(schedule, job)`` to a :class:`RunPlan`.
+
+    ``job`` is a :class:`repro.api.TrainJob` (anything exposing
+    ``make_arch()``, ``global_batch``, ``seq_len``, ``heterogeneity`` and
+    ``delay_rounds`` works).  ``adaptive`` applies the [Koloskova et
+    al. 22]-style per-round scale from the schedule's delay metadata; the
+    realised buffering depth is 1 round whenever ``delay_rounds > 0``
+    (AsyncTrainer's single swapped-every-round gbuf — see
+    :func:`repro.core.round_delay_scales`).
+    """
+    from ..data import DataConfig, HeterogeneousTokenPipeline
+
+    n = n_groups if n_groups is not None else schedule.n_workers
+    masks, scales = lower_rounds(
+        schedule, rounds,
+        delay_rounds=1 if getattr(job, "delay_rounds", 0) > 0 else 0,
+        adaptive=adaptive)
+    cfg = job.make_arch()
+    pipe = HeterogeneousTokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=job.seq_len, global_batch=job.global_batch,
+        n_groups=n, heterogeneity=job.heterogeneity, seed=seed))
+    return RunPlan(
+        masks=masks.astype(np.float32),
+        delay_scales=scales.astype(np.float32),
+        data_keys=fold_data_keys(seed, masks.shape[0]),
+        token_cdf=np.cumsum(pipe.pmf).astype(np.float32),
+        group_perms=np.stack(pipe.perms).astype(np.int32),
+        global_batch=job.global_batch, seq_len=job.seq_len,
+        seed=seed, adaptive=adaptive)

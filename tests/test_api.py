@@ -245,6 +245,50 @@ def test_trainer_masks_row_sums_equal_wait_b(name):
         assert masks[q, np.setdiff1d(np.arange(n), w)].sum() == 0
 
 
+def test_result_json_roundtrip_simulator_grid():
+    """Archived runs must round-trip: curves and grid arrays exactly
+    (dtype-tagged lists), spec/schedule as documented summaries."""
+    from repro.api import RunResult
+
+    prob = _logreg()
+    spec = ExperimentSpec(scheduler="shuffled", timing="poisson:slow=8",
+                          objective=prob, T=100, stepsize=grid(*GRID),
+                          log_every=20, seed=0)
+    res = SimulatorBackend().run(spec)
+    r2 = RunResult.from_json(res.to_json())
+    assert r2.backend == "simulator" and r2.gamma == res.gamma
+    np.testing.assert_array_equal(r2.x, res.x)
+    np.testing.assert_array_equal(r2.losses, res.losses)
+    np.testing.assert_array_equal(r2.grad_norms, res.grad_norms)
+    assert r2.grad_norms.dtype == res.grad_norms.dtype
+    assert set(r2.grid) == set(GRID)            # float keys restored
+    for g in GRID:
+        np.testing.assert_array_equal(r2.grid[g]["grad_norms"],
+                                      res.grid[g]["grad_norms"])
+        assert r2.grid[g]["score"] == res.grid[g]["score"]
+    assert r2.trace == {k: v for k, v in res.trace.items()}
+    # schedule comes back as its τ summary, not a live object
+    assert r2.schedule["tau_max"] == res.schedule.tau_max()
+    assert r2.schedule["wait_b"] == res.schedule.wait_b
+    # spec comes back as a tagged field dict
+    assert r2.spec["__dataclass__"] == "ExperimentSpec"
+    assert r2.spec["scheduler"] == "shuffled"
+
+
+def test_spec_carries_runtime_choice():
+    """One spec object serves every tier: runtime fields parse/validate on
+    the spec, and non-trainer backends simply ignore them."""
+    prob = _logreg()
+    spec = ExperimentSpec(scheduler="pure", objective=prob, T=30,
+                          stepsize=0.01, log_every=10,
+                          runtime="eager", rounds_per_launch=4)
+    assert spec.runtime == "eager" and spec.rounds_per_launch == 4
+    res = SimulatorBackend().run(spec)          # ignored, not rejected
+    assert res.backend == "simulator"
+    with pytest.raises(ValueError, match="runtime"):
+        ExperimentSpec(scheduler="pure", objective=prob, runtime="jitless")
+
+
 def test_run_dispatches_on_objective():
     prob = _logreg()
     res = run(ExperimentSpec(scheduler="rr", objective=prob, T=40,

@@ -1,0 +1,382 @@
+"""Golden parity suite for the ``repro.runtime`` whole-run executor.
+
+The load-bearing guarantee: the scan executor is the SAME run as the eager
+per-round loop — same plan, same device-synthesised batches, same step
+function — only the dispatch differs.  Curves must therefore agree within
+the documented FMA-contraction tolerances (tests/test_optim_fused.py:
+XLA may contract multiply-adds differently when the step is compiled
+inside a ``lax.scan`` body than when compiled standalone; bitwise f32
+equality is NOT attainable, rtol=1e-5 + small atol is the contract).
+
+Covered here:
+
+* plan lowering (masks/scales/keys shapes, resume-stable key folding),
+* scan-vs-eager curve parity across (scheduler × update_impl ×
+  delay-adaptive) combos, including the sync (delay_rounds=0) baseline,
+* chunk-boundary edge cases: ``rounds_per_launch`` of 1, ``rounds``, and a
+  ragged ``rounds % K != 0`` split, plus ``on_step`` barrier semantics,
+* checkpoint-resume at a chunk boundary (pooled state) ≡ uninterrupted,
+* ``TrainerBackend`` wiring (spec/constructor runtime resolution), and
+* an 8-virtual-device pooled ZeRO-sharded scan run (subprocess
+  self-bootstrap on single-device hosts, mirroring
+  tests/test_pool_multidevice.py).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import ExperimentSpec, RunResult, TrainJob, TrainerBackend
+from repro.core import lower_rounds, round_delay_scales, round_masks
+from repro.runtime import (METRICS, RunPlan, compile_plan, execute,
+                           fold_data_keys, make_batch_fn, run_eager,
+                           run_scan)
+
+MULTI = jax.device_count() >= 8
+
+#: micro transformer: jit/compile dominates CPU test wall time, so shrink
+#: the per-step math to noise and spend the budget on dispatch coverage
+MICRO = (("n_layers", 1), ("d_model", 64), ("n_heads", 2), ("n_kv_heads", 1),
+         ("d_ff", 64), ("vocab", 97))
+
+TOL = dict(rtol=1e-5, atol=1e-7)
+
+
+def _job(**kw):
+    kw.setdefault("arch", "qwen2-0.5b")
+    kw.setdefault("global_batch", 8)
+    kw.setdefault("seq_len", 16)
+    kw.setdefault("arch_overrides", MICRO)
+    return TrainJob(**kw)
+
+
+def _spec(job, scheduler="shuffled", T=6, adaptive=False, **kw):
+    stepsize = f"delay_adaptive:{3e-3}" if adaptive else 3e-3
+    return ExperimentSpec(scheduler=scheduler, timing="poisson:slow=6",
+                          objective=job, T=T, n_workers=4,
+                          stepsize=stepsize, seed=0, **kw)
+
+
+def _trainer(job, mesh=None):
+    from jax.sharding import Mesh
+    from repro.distributed import AsyncTrainer, AsyncConfig
+    from repro.optim import OptConfig
+
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+    tr = AsyncTrainer(
+        job.make_arch(), mesh,
+        opt=OptConfig(lr=3e-3, clip_norm=job.clip_norm,
+                      update_impl=job.update_impl),
+        async_cfg=AsyncConfig(delay_rounds=job.delay_rounds))
+    tr.n_groups = 4
+    return tr
+
+
+def _plan_for(spec, job):
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    return compile_plan(schedule, job, rounds=spec.T, n_groups=4,
+                        seed=spec.seed,
+                        adaptive=spec.stepsize.kind == "delay_adaptive")
+
+
+@pytest.mark.skipif(MULTI, reason="already on a multi-device host")
+def test_multidevice_suite_in_subprocess():
+    """Single-device hosts: run this file under 8 virtual CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", "-p", "no:cacheprovider",
+         os.path.abspath(__file__), "-k", "multidevice"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, \
+        f"8-device runtime suite failed:\n{r.stdout}\n{r.stderr}"
+    assert " passed" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# plan lowering
+# ---------------------------------------------------------------------------
+def test_lower_rounds_matches_components():
+    spec = _spec(_job(), scheduler="fedbuff:b=2", T=10)
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    masks, ones = lower_rounds(schedule, 10)
+    np.testing.assert_array_equal(masks, round_masks(schedule, 10))
+    np.testing.assert_array_equal(ones, np.ones(10, np.float32))
+    m2, scales = lower_rounds(schedule, 10, delay_rounds=1, adaptive=True)
+    np.testing.assert_array_equal(m2, masks)
+    np.testing.assert_array_equal(
+        scales, round_delay_scales(schedule, 10, delay_rounds=1))
+
+
+def test_compile_plan_shapes_and_validation():
+    job = _job()
+    spec = _spec(job, T=7)
+    plan = _plan_for(spec, job)
+    assert plan.rounds == 7 and plan.n_groups == 4
+    assert plan.masks.shape == (7, 4)
+    assert plan.delay_scales.shape == (7,)
+    assert plan.data_keys.shape == (7, 2)
+    assert plan.vocab == 97                      # MICRO override
+    assert plan.group_perms.shape == (4, 97)
+    assert np.all(np.diff(plan.token_cdf) >= 0)
+    assert abs(plan.token_cdf[-1] - 1.0) < 1e-5
+    # not adaptive → neutral scales
+    np.testing.assert_array_equal(plan.delay_scales, np.ones(7, np.float32))
+    with pytest.raises(ValueError, match="rounds"):
+        RunPlan(masks=plan.masks, delay_scales=plan.delay_scales[:3],
+                data_keys=plan.data_keys, token_cdf=plan.token_cdf,
+                group_perms=plan.group_perms, global_batch=8, seq_len=16,
+                seed=0)
+    with pytest.raises(ValueError, match="divide"):
+        RunPlan(masks=plan.masks, delay_scales=plan.delay_scales,
+                data_keys=plan.data_keys, token_cdf=plan.token_cdf,
+                group_perms=plan.group_perms, global_batch=9, seq_len=16,
+                seed=0)
+
+
+def test_fold_data_keys_resume_stable():
+    """Key at round q must not depend on the horizon — that is what makes
+    a resumed run regenerate the identical batch stream."""
+    k10, k4 = fold_data_keys(3, 10), fold_data_keys(3, 4)
+    np.testing.assert_array_equal(k10[:4], k4)
+    assert not np.array_equal(fold_data_keys(4, 4), k4)      # seed matters
+    assert len({tuple(k) for k in k10}) == 10                # distinct rounds
+
+
+def test_device_batch_synthesis_is_grouped_and_deterministic():
+    job = _job()
+    plan = _plan_for(_spec(job, T=3), job)
+    batch_of = make_batch_fn(plan, job.make_arch())
+    b0 = batch_of(jnp.asarray(plan.data_keys[0]))
+    b0b = batch_of(jnp.asarray(plan.data_keys[0]))
+    b1 = batch_of(jnp.asarray(plan.data_keys[1]))
+    toks = np.asarray(b0["tokens"])
+    assert toks.shape == (8, 16) and toks.dtype == np.int32
+    assert toks.min() >= 0 and toks.max() < plan.vocab
+    np.testing.assert_array_equal(toks, np.asarray(b0b["tokens"]))
+    assert not np.array_equal(toks, np.asarray(b1["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# golden scan-vs-eager parity (scheduler × update_impl × delay-adaptive)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheduler,impl,adaptive,delay_rounds", [
+    ("shuffled", "reference", False, 1),
+    ("fedbuff:b=2", "reference", True, 1),
+    ("pure", "reference", False, 0),                  # sync baseline
+    ("random", "pallas_interpret", False, 1),
+    ("shuffled", "pallas_pooled_interpret", True, 1),
+])
+def test_scan_matches_eager(scheduler, impl, adaptive, delay_rounds):
+    job = _job(update_impl=impl, delay_rounds=delay_rounds)
+    spec = _spec(job, scheduler=scheduler, T=6, adaptive=adaptive)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    r_e = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
+    r_s = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=4)               # ragged: 4 + 2
+    assert r_e.launches == 12 and r_e.host_syncs == 6   # batch jit + step jit
+    assert r_s.launches == 2 and r_s.host_syncs == 2
+    for k in METRICS:
+        np.testing.assert_allclose(r_s.metrics[k], r_e.metrics[k], **TOL,
+                                   err_msg=f"metric {k}")
+    if adaptive:        # the adaptive lowering actually ran (the rule may
+        assert plan.adaptive     # still saturate at 1 for short horizons)
+        assert np.all(plan.delay_scales <= 1.0)
+
+
+# ---------------------------------------------------------------------------
+# chunk-boundary edge cases + on_step barrier semantics
+# ---------------------------------------------------------------------------
+def test_chunk_boundary_edge_cases():
+    """K=1 (degenerate eager), K=rounds (one launch), ragged K — all the
+    same curves; on_step fires once per round, at chunk boundaries, in
+    order."""
+    job = _job()
+    spec = _spec(job, T=5)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    base = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
+    for k, launches in ((1, 5), (3, 2), (5, 1)):
+        seen = []
+        r = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                     rounds_per_launch=k,
+                     on_step=lambda i, st, m: seen.append((i, m["loss"])))
+        assert r.launches == launches and r.host_syncs == launches
+        assert [i for i, _ in seen] == list(range(5))
+        np.testing.assert_allclose([l for _, l in seen],
+                                   base.metrics["loss"], **TOL)
+        for name in METRICS:
+            np.testing.assert_allclose(r.metrics[name], base.metrics[name],
+                                       **TOL, err_msg=f"K={k} {name}")
+
+
+def test_neutral_plan_honors_trainer_static_delay_rule():
+    """A NON-adaptive plan must not override the trainer's own static
+    ``AsyncConfig(delay_adaptive=True)`` 1/(1+delay) rule with an explicit
+    all-ones scale — the executor calls the 3-arg step, the trainer's
+    config stays in charge, and scan still matches eager."""
+    from jax.sharding import Mesh
+    from repro.distributed import AsyncTrainer, AsyncConfig
+    from repro.optim import OptConfig
+
+    job = _job()
+    spec = _spec(job, T=4)
+    plan = _plan_for(spec, job)
+    assert not plan.adaptive
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    tr_static = AsyncTrainer(
+        job.make_arch(), mesh,
+        opt=OptConfig(lr=3e-3, clip_norm=job.clip_norm),
+        async_cfg=AsyncConfig(delay_rounds=1, delay_adaptive=True))
+    tr_static.n_groups = 4
+    r_e = run_eager(tr_static, plan,
+                    tr_static.init_state(jax.random.PRNGKey(0)))
+    r_s = run_scan(tr_static, plan,
+                   tr_static.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=2)
+    for k in METRICS:
+        np.testing.assert_allclose(r_s.metrics[k], r_e.metrics[k], **TOL)
+    # and the halved stepsize actually bit: curves diverge from the plain
+    # (delay_adaptive=False) trainer once the first buffered grad applies
+    plain = run_eager(_trainer(job), plan,
+                      tr_static.init_state(jax.random.PRNGKey(0)))
+    assert not np.allclose(plain.metrics["loss"][2:],
+                           r_e.metrics["loss"][2:], rtol=1e-6)
+
+
+def test_execute_dispatch_and_unknown_runtime():
+    job = _job()
+    plan = _plan_for(_spec(job, T=2), job)
+    tr = _trainer(job)
+    r = execute(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                runtime="scan", rounds_per_launch=2)
+    assert r.launches == 1
+    with pytest.raises(ValueError, match="unknown runtime"):
+        execute(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                runtime="vectorized")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-resume parity at a chunk boundary (pooled state)
+# ---------------------------------------------------------------------------
+def test_checkpoint_resume_parity_pooled(tmp_path):
+    """Save at a chunk boundary via repro.checkpoint, restore (pooled
+    pools + scalars), finish — loss/grad-norm curves must match an
+    uninterrupted run within the FMA tolerances."""
+    from repro import checkpoint
+
+    job = _job(update_impl="pallas_pooled_interpret")
+    spec = _spec(job, T=6)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    assert tr.pooled
+
+    full = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                    rounds_per_launch=3)
+
+    ckpt = str(tmp_path / "ckpt")
+    saved = {}
+
+    def barrier(i, state, m):
+        if i == 2:                  # chunk boundary: state is post-round-3
+            checkpoint.save(ckpt, state, step=i + 1)
+            saved["step"] = i + 1
+
+    first = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                     rounds_per_launch=3, on_step=barrier)
+    assert saved["step"] == 3
+    for k in METRICS:
+        np.testing.assert_allclose(first.metrics[k], full.metrics[k], **TOL)
+
+    restored = checkpoint.restore(ckpt, tr.abstract_state(),
+                                  shardings=tr.state_shardings())
+    assert int(restored["step"]) == 3
+    tail = run_scan(tr, plan, restored, rounds_per_launch=3, start_round=3)
+    for k in ("loss", "grad_norm"):
+        np.testing.assert_allclose(tail.metrics[k], full.metrics[k][3:],
+                                   **TOL, err_msg=f"resumed {k}")
+
+
+# ---------------------------------------------------------------------------
+# TrainerBackend wiring
+# ---------------------------------------------------------------------------
+def test_backend_runtime_resolution():
+    be = TrainerBackend()
+    assert be.resolve_runtime(_spec(_job())) == ("scan", 8)
+    assert be.resolve_runtime(_spec(_job(), runtime="eager",
+                                    rounds_per_launch=3)) == ("eager", 3)
+    assert TrainerBackend(runtime="eager", rounds_per_launch=2) \
+        .resolve_runtime(_spec(_job(), runtime="scan")) == ("eager", 2)
+    with pytest.raises(ValueError, match="unknown runtime"):
+        _spec(_job(), runtime="vectorized")
+    with pytest.raises(ValueError, match="rounds_per_launch"):
+        _spec(_job(), rounds_per_launch=0)
+
+
+def test_backend_scan_eager_parity_and_result_roundtrip():
+    """End-to-end through ``repro.api``: default scan ≡ eager oracle, the
+    RunResult records the dispatch provenance, and the archived JSON
+    round-trips the curves exactly."""
+    job = _job()
+    spec = _spec(job, T=4, rounds_per_launch=2)
+    res_s = TrainerBackend().run(spec)
+    res_e = TrainerBackend(runtime="eager").run(spec)
+    assert res_s.extra["runtime"] == "scan"
+    assert res_s.extra["rounds_per_launch"] == 2
+    assert res_s.extra["launches"] == 2 and res_s.extra["host_syncs"] == 2
+    assert res_e.extra["runtime"] == "eager"
+    assert res_e.extra["launches"] == 8 and res_e.extra["host_syncs"] == 4
+    np.testing.assert_allclose(res_s.losses, res_e.losses, **TOL)
+    np.testing.assert_allclose(res_s.grad_norms, res_e.grad_norms, **TOL)
+    assert len(res_s.extra["metrics"]) == 4
+
+    r2 = RunResult.from_json(res_s.to_json())
+    np.testing.assert_array_equal(r2.losses, res_s.losses)
+    np.testing.assert_array_equal(r2.grad_norms, res_s.grad_norms)
+    assert r2.backend == "trainer"
+    assert r2.extra["runtime"] == "scan"
+    assert r2.schedule["tau_max"] == res_s.schedule.tau_max()
+
+
+# ---------------------------------------------------------------------------
+# 8-virtual-device pooled scan run (ZeRO-sharded pools under shard_map)
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(not MULTI, reason="needs >= 8 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_scan_pooled_multidevice_parity():
+    """Scan executor on a 4-data × 2-model mesh with pooled ZeRO-sharded
+    state ≡ the eager oracle on the same mesh, and the carried pools keep
+    their sharding across chunk launches (donation must not silently
+    replicate)."""
+    from repro.launch.mesh import _make_mesh
+    from repro.distributed import pooled_pspec
+    from jax.sharding import NamedSharding
+
+    mesh = _make_mesh((4, 2), ("data", "model"))
+    job = _job(update_impl="pallas_pooled_interpret")
+    spec = _spec(job, T=4)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job, mesh=mesh)
+    assert tr.pool_layout.n_shards == 4
+
+    r_e = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
+    r_s = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=2)
+    for k in METRICS:
+        np.testing.assert_allclose(r_s.metrics[k], r_e.metrics[k], **TOL,
+                                   err_msg=f"metric {k}")
+    want = NamedSharding(mesh, pooled_pspec(mesh))
+    for dk, grp in r_s.state["pools"].items():
+        for name, buf in grp.items():
+            assert buf.sharding.is_equivalent_to(want, buf.ndim), \
+                f"pool {dk}/{name} lost ZeRO sharding: {buf.sharding}"
