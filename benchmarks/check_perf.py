@@ -1,0 +1,98 @@
+"""CI gate: fail on a dispatch-layer perf regression vs the committed
+baseline ``benchmarks/BENCH_runtime.json``.
+
+Absolute rounds/s across heterogeneous CI hosts is pure noise — a GitHub
+runner and the laptop that wrote the baseline differ by far more than any
+real regression.  What IS machine-portable is each row's rounds/s
+normalised by the SAME payload's eager row: that ratio isolates the
+dispatch/metric-transport layer (launch amortisation, readback barriers,
+tap overhead) from raw core speed, which is exactly what this bench
+exists to track.  The gate fails when any scan/grid row's normalised
+throughput (or the grid lane's ``grid_speedup``) drops more than
+``--tolerance`` (default 30%) below the baseline's.
+
+Usage::
+
+    python benchmarks/check_perf.py experiments/figs/BENCH_runtime.json \
+        benchmarks/BENCH_runtime.json --tolerance 0.3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows(payload: dict) -> dict:
+    """(runtime, metrics, K) -> entry, plus the eager rounds/s."""
+    eager = [e for e in payload["entries"] if e["runtime"] == "eager"]
+    if not eager:
+        raise SystemExit("payload has no eager row to normalise against")
+    rows = {(e["runtime"], e.get("metrics", "chunk"),
+             e["rounds_per_launch"]): e
+            for e in payload["entries"]}
+    return rows, float(eager[0]["rounds_per_s"])
+
+
+def check(current: dict, baseline: dict, tolerance: float) -> list:
+    cur_rows, cur_eager = _rows(current)
+    base_rows, base_eager = _rows(baseline)
+    failures = []
+    print(f"{'row':<28} {'base':>8} {'now':>8} {'floor':>8}  verdict")
+    for key, base in sorted(base_rows.items(), key=str):
+        if key[0] == "eager":
+            continue                      # the normaliser, not a subject
+        cur = cur_rows.get(key)
+        if cur is None:
+            failures.append(f"{key}: missing from current payload")
+            print(f"{str(key):<28} {'':>8} {'':>8} {'':>8}  MISSING")
+            continue
+        base_n = float(base["rounds_per_s"]) / base_eager
+        cur_n = float(cur["rounds_per_s"]) / cur_eager
+        floor = base_n * (1.0 - tolerance)
+        ok = cur_n >= floor
+        print(f"{str(key):<28} {base_n:>8.3f} {cur_n:>8.3f} "
+              f"{floor:>8.3f}  {'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"{key}: normalised rounds/s {cur_n:.3f} < floor "
+                f"{floor:.3f} (baseline {base_n:.3f}, "
+                f"tolerance {tolerance:.0%})")
+        if "grid_speedup" in base:
+            g_base = float(base["grid_speedup"])
+            g_cur = float(cur.get("grid_speedup", 0.0))
+            g_floor = g_base * (1.0 - tolerance)
+            g_ok = g_cur >= g_floor
+            print(f"{'  grid_speedup':<28} {g_base:>8.3f} {g_cur:>8.3f} "
+                  f"{g_floor:>8.3f}  {'ok' if g_ok else 'REGRESSION'}")
+            if not g_ok:
+                failures.append(
+                    f"{key}: grid_speedup {g_cur:.3f} < floor "
+                    f"{g_floor:.3f}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly produced BENCH_runtime.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.3,
+                    help="allowed fractional drop in normalised rounds/s "
+                         "(default 0.3 = 30%%)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, args.tolerance)
+    if failures:
+        print("\nPERF REGRESSION vs committed baseline:")
+        for msg in failures:
+            print(" -", msg)
+        sys.exit(1)
+    print("\nno dispatch-layer regression "
+          f"(tolerance {args.tolerance:.0%})")
+
+
+if __name__ == "__main__":
+    main()

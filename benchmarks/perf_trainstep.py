@@ -235,90 +235,157 @@ def run_update_ab(out: str = "experiments/figs", quick: bool = False,
 
 
 def run_dispatch_ab(out: str = "experiments/figs", quick: bool = False,
-                    rounds: int = 0, arch: str = "qwen2-0.5b"):
+                    rounds: int = 0, arch: str = "qwen2-0.5b",
+                    save_baseline: bool = False):
     """Eager per-round loop vs scan whole-run executor on ONE plan.
 
     Times the WARM dispatch path — plan slicing, device batch synthesis,
-    step launch, metric readback, compiled executables held in a
-    ``PlanExecutor`` — at several ``rounds_per_launch`` values and writes
-    ``BENCH_runtime.json`` (rounds/s + launch and host-sync counts).
-    Every row runs the SAME ``RunPlan`` and step function, so the delta
-    is pure dispatch: the eager loop pays one Python dispatch, one batch
-    launch and one device→host metric sync per ROUND, the scan executor
-    pays them once per CHUNK.  Dispatch overhead is a host-side cost, so
-    unlike the kernel A/Bs this ratio is meaningful on any backend (the
-    JSON records the backend regardless).  The bench arch is deliberately
-    small: dispatch overhead is a per-round constant, so the config keeps
-    per-round compute comparable to it (at 100×-larger steps the same
-    absolute win disappears into the compute — record, don't infer)."""
+    step launch, metric transport, compiled executables held in a
+    ``PlanExecutor`` — and writes ``BENCH_runtime.json``.  Every row runs
+    the SAME ``RunPlan`` and step function, so the delta is pure dispatch.
+    Rows:
+
+    * ``eager`` — one Python dispatch + one metric sync per ROUND,
+    * ``scan``/``chunk_sync`` — the PR-4 path: K rounds per launch with a
+      blocking metric readback every chunk (an ``on_step`` consumer),
+    * ``scan``/``chunk`` — overlapped dispatch: chunks enqueue
+      back-to-back, ONE deferred readback at the end,
+    * ``scan``/``tap`` at K = rounds — whole-run single launch, metrics
+      streamed per round through the io_callback tap,
+    * ``scan``/``none`` at K = rounds — metrics discarded on device,
+    * ``grid`` — the vmapped γ-grid lane over ``n_grid`` points vs the
+      same points run sequentially (``grid_speedup`` is that ratio).
+
+    Dispatch overhead is a host-side cost, so unlike the kernel A/Bs the
+    ratios are meaningful on any backend (the JSON records the backend
+    regardless).  The bench arch is deliberately small: dispatch overhead
+    is a per-round constant, so the config keeps per-round compute
+    comparable to it (at 100×-larger steps the same absolute win
+    disappears into the compute — record, don't infer).
+
+    ``save_baseline`` additionally writes the payload to
+    ``benchmarks/BENCH_runtime.json`` — the committed baseline
+    ``benchmarks/check_perf.py`` gates CI against."""
     import jax.random as jrandom
     from repro.api import ExperimentSpec, TrainJob, TrainerBackend
     from repro.runtime import PlanExecutor, compile_plan
 
     os.makedirs(out, exist_ok=True)
     mesh = _mesh()
-    # 64 rounds even in --quick: the timed window must dwarf scheduler
-    # jitter (compile time dominates the bench's wall clock either way)
-    rounds = rounds or 64
+    # 256 rounds even in --quick: the timed window must dwarf OS
+    # scheduler jitter (compile time dominates the bench's wall clock
+    # either way).  The arch is the SMALLEST step the trainer can run —
+    # this bench measures the dispatch layer, and per-round compute is a
+    # constant both paths pay, so shrinking it is what makes the
+    # dispatch delta visible at all
+    rounds = rounds or 256
     ks = [1, 8] if quick else [1, 4, 8, 16]
-    job = TrainJob(arch=arch, global_batch=8, seq_len=16,
-                   arch_overrides=(("n_layers", 1), ("d_model", 64),
-                                   ("d_ff", 128)))
+    grid_gammas = (3e-3, 1.5e-3, 7.5e-4, 3.75e-4)
+    job = TrainJob(arch=arch, global_batch=4, seq_len=4,
+                   arch_overrides=(("n_layers", 1), ("d_model", 8),
+                                   ("n_heads", 1), ("n_kv_heads", 1),
+                                   ("d_ff", 16), ("vocab", 127)))
     spec = ExperimentSpec(scheduler="shuffled", timing="poisson:slow=6",
                           objective=job, T=rounds, n_workers=4,
                           stepsize=3e-3, seed=0)
     cfg = job.make_arch()
     _, schedule = TrainerBackend.masks_for(spec, 4)
-    plan = compile_plan(schedule, job, rounds=rounds, n_groups=4, seed=0)
+    plan = compile_plan(schedule, job, rounds=rounds, n_groups=4, seed=0,
+                        grid_gammas=grid_gammas, base_gamma=3e-3)
     tr = AsyncTrainer(cfg, mesh, opt=OptConfig(lr=3e-3, clip_norm=1.0),
                       async_cfg=AsyncConfig(delay_rounds=1))
     tr.n_groups = 4
     ex = PlanExecutor(tr, plan, donate=False)
+    # one shared initial state OUTSIDE every timed window (state init is
+    # a constant that would compress the ratios); donate=False above is
+    # what makes reuse sound — no launch consumes the buffers
+    state0 = tr.init_state(jrandom.PRNGKey(0))
 
     def timed(fn):
-        fn(tr.init_state(jrandom.PRNGKey(0)))     # compile + warm caches
+        fn(state0)                                # compile + warm caches
         best, r = None, None
         for _ in range(3):                        # min-of-3: dispatch noise
             t0 = time.time()
-            r = fn(tr.init_state(jrandom.PRNGKey(0)))
+            r = fn(state0)
             dt = time.time() - t0
             best = dt if best is None else min(best, dt)
         return best, r
 
     entries = []
+
+    def record(runtime, mode, k, seconds, r, eager_s=None, **kw):
+        e = {"runtime": runtime, "metrics": mode, "rounds_per_launch": k,
+             "seconds": round(seconds, 4),
+             "rounds_per_s": round(rounds / seconds, 2),
+             "launches": r.launches, "host_syncs": r.host_syncs,
+             "tap_events": r.tap_events, **kw}
+        if eager_s is not None:
+            e["speedup_vs_eager"] = round(eager_s / seconds, 3)
+        entries.append(e)
+        extra = "".join(f" {k_}={v}" for k_, v in kw.items())
+        vs = f", {e['speedup_vs_eager']}x vs eager" if eager_s else ""
+        print(f"{runtime}/{mode} K={k}: {rounds / seconds:.1f} rounds/s "
+              f"({r.launches} launches, {r.host_syncs} host syncs, "
+              f"{r.tap_events} taps{vs}){extra}")
+
     eager_s, r_e = timed(ex.run_eager)
-    entries.append({"runtime": "eager", "rounds_per_launch": 1,
-                    "seconds": round(eager_s, 4),
-                    "rounds_per_s": round(rounds / eager_s, 2),
-                    "launches": r_e.launches, "host_syncs": r_e.host_syncs})
-    print(f"eager: {rounds / eager_s:.1f} rounds/s "
-          f"({r_e.host_syncs} host syncs)")
+    record("eager", "per_round", 1, eager_s, r_e)
+    noop = lambda i, st, m: None
     for k in ks:
-        scan_s, r_s = timed(
-            lambda s, k=k: ex.run_scan(s, rounds_per_launch=k))
-        entries.append({"runtime": "scan", "rounds_per_launch": k,
-                        "seconds": round(scan_s, 4),
-                        "rounds_per_s": round(rounds / scan_s, 2),
-                        "launches": r_s.launches,
-                        "host_syncs": r_s.host_syncs,
-                        "speedup_vs_eager": round(eager_s / scan_s, 3)})
-        print(f"scan K={k}: {rounds / scan_s:.1f} rounds/s "
-              f"({r_s.host_syncs} host syncs, "
-              f"{eager_s / scan_s:.2f}x vs eager)")
+        s, r = timed(lambda st, k=k: ex.run_scan(
+            st, rounds_per_launch=k, on_step=noop))
+        record("scan", "chunk_sync", k, s, r, eager_s)
+    chunk_s = {}
+    for k in sorted({min(8, rounds), rounds}):
+        s, r = timed(lambda st, k=k: ex.run_scan(st, rounds_per_launch=k))
+        chunk_s[k] = s
+        record("scan", "chunk", k, s, r, eager_s)
+    s, r = timed(lambda st: ex.run_scan(st, rounds_per_launch=rounds,
+                                        metrics="tap"))
+    record("scan", "tap", rounds, s, r, eager_s)
+    s, r = timed(lambda st: ex.run_scan(st, rounds_per_launch=rounds,
+                                        metrics="none"))
+    record("scan", "none", rounds, s, r, eager_s)
+
+    # γ-grid lane: all points vmapped in one program vs the same points
+    # run back-to-back through the (already warm) scan executor — the
+    # sequential per-point time is the scan/chunk row measured above
+    k_grid = min(8, rounds)
+    seq_total = chunk_s[k_grid] * len(grid_gammas)
+    grid_s, r_g = timed(lambda st: ex.run_grid(
+        st, rounds_per_launch=k_grid))
+    record("grid", "chunk", k_grid, grid_s, r_g,
+           n_grid=len(grid_gammas),
+           sequential_seconds=round(seq_total, 4),
+           grid_speedup=round(seq_total / grid_s, 3))
+    print(f"grid lane: {len(grid_gammas)} γ in {grid_s:.3f}s vs "
+          f"{seq_total:.3f}s sequential "
+          f"({seq_total / grid_s:.2f}x)")
+
     payload = {
         "bench": "runtime_dispatch_ab",
         "backend": jax.default_backend(),
         "arch": arch, "rounds": rounds,
         "note": ("same RunPlan + step function for every row; only the "
-                 "dispatch layer differs.  host_syncs counts device→host "
-                 "metric transfers (eager: one per round; scan: one per "
-                 "chunk)"),
+                 "dispatch/metric-transport layer differs.  host_syncs "
+                 "counts blocking device→host metric readbacks; "
+                 "tap_events counts io_callback rows; chunk_sync is the "
+                 "per-chunk-barrier path (an on_step consumer), chunk is "
+                 "overlapped dispatch with one deferred readback.  "
+                 "grid_speedup = sequential wall time / vmapped-lane "
+                 "wall time over n_grid stepsizes"),
         "entries": entries,
     }
     path = os.path.join(out, "BENCH_runtime.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print("wrote", path)
+    if save_baseline:
+        base = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_runtime.json")
+        with open(base, "w") as f:
+            json.dump(payload, f, indent=2)
+        print("wrote baseline", base)
     return payload
 
 
@@ -334,8 +401,13 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=0,
-                    help="dispatch A/B: rounds per timed run (0 = 64; "
+                    help="dispatch A/B: rounds per timed run (0 = 256; "
                          "--quick only trims the K sweep, not the rounds)")
+    ap.add_argument("--save-baseline", action="store_true",
+                    help="dispatch A/B: also write the payload to "
+                         "benchmarks/BENCH_runtime.json (the committed "
+                         "baseline benchmarks/check_perf.py gates "
+                         "against)")
     ap.add_argument("--out", default="experiments/figs")
     ap.add_argument("--archs", default=None,
                     help="comma-separated arch names (A/B mode)")
@@ -347,7 +419,8 @@ def main():
                       iters=max(args.iters, 5), archs=archs)
     if args.dispatch_ab:
         run_dispatch_ab(out=args.out, quick=args.quick, rounds=args.rounds,
-                        arch=(archs[0] if archs else "qwen2-0.5b"))
+                        arch=(archs[0] if archs else "qwen2-0.5b"),
+                        save_baseline=args.save_baseline)
     if not (args.ab or args.dispatch_ab):
         for r in run(out=args.out, quick=args.quick):
             print(r)

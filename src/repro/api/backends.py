@@ -107,25 +107,36 @@ class TrainerBackend:
     rules; ``on_step(i, state, metrics)`` is invoked once per round (for
     logging / checkpointing without owning the loop).  ``runtime`` selects
     the dispatch layer: ``"scan"`` (default) compiles
-    ``rounds_per_launch`` rounds into one XLA launch (``on_step`` then
-    fires at chunk boundaries, with the end-of-chunk state); ``"eager"``
-    launches one round at a time — the parity oracle.  Constructor args
-    override the spec's ``runtime``/``rounds_per_launch`` fields; both
-    unset defaults to ``"scan"``.
+    ``rounds_per_launch`` rounds into one XLA launch; ``"eager"`` launches
+    one round at a time — the parity oracle.  ``metrics`` selects the
+    scan executor's metric transport (``"chunk"`` default: ``on_step``
+    fires at chunk boundaries with the end-of-chunk state; ``"tap"``:
+    per-round streaming, ``state=None``; ``"none"``: no curves).
+    Constructor args override the spec's ``runtime``/``rounds_per_launch``
+    /``metrics`` fields; both unset falls back to the defaults.
+
+    A grid stepsize policy on the scan runtime executes ALL γ points in
+    one vmapped program per chunk (the plan's γ-axis +
+    :meth:`repro.runtime.PlanExecutor.run_grid`) — one trainer, one
+    compile, shared masks/batches — instead of N sequential runs; the
+    eager runtime keeps the sequential loop as the oracle.
     """
 
     name = "trainer"
     default_runtime = "scan"
+    default_metrics = "chunk"
 
     def __init__(self, mesh=None, rules=None,
                  on_step: Optional[Callable] = None,
                  runtime: Optional[str] = None,
-                 rounds_per_launch: Optional[int] = None):
+                 rounds_per_launch: Optional[int] = None,
+                 metrics: Optional[str] = None):
         self.mesh = mesh
         self.rules = rules
         self.on_step = on_step
         self.runtime = runtime
         self.rounds_per_launch = rounds_per_launch
+        self.metrics = metrics
 
     # ---- pieces shared with tests -----------------------------------------
     @staticmethod
@@ -137,12 +148,13 @@ class TrainerBackend:
         return round_masks(schedule), schedule
 
     def resolve_runtime(self, spec: ExperimentSpec):
-        """(runtime, rounds_per_launch): constructor overrides spec,
-        both-unset → the scan default."""
+        """(runtime, rounds_per_launch, metrics): constructor overrides
+        spec, both-unset → the scan/chunk defaults."""
         runtime = self.runtime or spec.runtime or self.default_runtime
         k = self.rounds_per_launch if self.rounds_per_launch is not None \
             else spec.rounds_per_launch
-        return runtime, int(k)
+        metrics = self.metrics or spec.metrics or self.default_metrics
+        return runtime, int(k), metrics
 
     def run(self, spec: ExperimentSpec) -> RunResult:
         job = spec.objective
@@ -150,9 +162,19 @@ class TrainerBackend:
             raise TypeError("TrainerBackend needs a TrainJob objective")
         policy: StepsizePolicy = spec.stepsize
         if policy.kind == "grid":
+            runtime, _, _ = self.resolve_runtime(spec)
+            # the vmapped lane has no per-round callback hook, so an
+            # on_step consumer keeps the sequential loop
+            if runtime == "scan" and len(policy.gammas) > 1 \
+                    and self.on_step is None:
+                return self._run_grid(spec, job)
             best = None
             for g in policy.gammas:
-                res = self._run_single(spec, job, g, adaptive=False)
+                # scoring needs loss curves, so the sequential grid loop
+                # overrides a metrics="none" resolution (as the vmapped
+                # lane does)
+                res = self._run_single(spec, job, g, adaptive=False,
+                                       metrics_floor="chunk")
                 score = float(np.mean(res.losses[-3:]))
                 if best is None or score < best[0]:
                     best = (score, res)
@@ -160,14 +182,13 @@ class TrainerBackend:
         return self._run_single(spec, job, policy.gamma,
                                 adaptive=policy.kind == "delay_adaptive")
 
-    def _run_single(self, spec: ExperimentSpec, job: TrainJob, lr: float,
-                    adaptive: bool) -> RunResult:
-        import jax
+    # ---- shared construction ----------------------------------------------
+    def _make_trainer(self, spec: ExperimentSpec, job: TrainJob, lr: float,
+                      adaptive: bool):
         from ..distributed import AsyncTrainer, AsyncConfig, DEFAULT_RULES
         from ..launch.mesh import make_host_mesh
         from ..optim import OptConfig
 
-        t0 = time.time()
         cfg = job.make_arch()
         mesh = self.mesh if self.mesh is not None else make_host_mesh()
         rules = self.rules if self.rules is not None else DEFAULT_RULES
@@ -185,7 +206,18 @@ class TrainerBackend:
             raise ValueError(
                 f"the {n_groups} worker groups must divide "
                 f"global_batch={job.global_batch}")
+        return tr, cfg, n_groups
 
+    def _run_single(self, spec: ExperimentSpec, job: TrainJob, lr: float,
+                    adaptive: bool,
+                    metrics_floor: Optional[str] = None) -> RunResult:
+        """One (γ, adaptive) run.  ``metrics_floor`` replaces a resolved
+        ``"none"`` with a curve-producing mode for callers that must read
+        the losses back (grid scoring)."""
+        import jax
+
+        t0 = time.time()
+        tr, cfg, n_groups = self._make_trainer(spec, job, lr, adaptive)
         masks, schedule = self.masks_for(spec, n_groups)
         state = tr.init_state(jax.random.PRNGKey(spec.seed))
 
@@ -198,16 +230,21 @@ class TrainerBackend:
         # executor replays plan slices with no per-round host work
         plan = compile_plan(schedule, job, rounds=rounds, n_groups=n_groups,
                             seed=spec.seed, adaptive=adaptive)
-        runtime, rounds_per_launch = self.resolve_runtime(spec)
+        runtime, rounds_per_launch, metrics = self.resolve_runtime(spec)
+        if metrics == "none" and metrics_floor is not None:
+            metrics = metrics_floor
         exec_res = execute(tr, plan, state, runtime=runtime,
                            rounds_per_launch=rounds_per_launch,
-                           on_step=self.on_step)
+                           metrics=metrics, on_step=self.on_step)
 
+        have_curves = bool(exec_res.metrics)
         return RunResult(
             spec=spec, backend=self.name, x=exec_res.state,
             log_ts=np.arange(rounds),
-            losses=exec_res.metrics["loss"].astype(np.float64),
-            grad_norms=exec_res.metrics["grad_norm"].astype(np.float64),
+            losses=exec_res.metrics["loss"].astype(np.float64)
+            if have_curves else None,
+            grad_norms=exec_res.metrics["grad_norm"].astype(np.float64)
+            if have_curves else None,
             gamma=lr, schedule=schedule, trace=summarize(schedule),
             seconds=time.time() - t0,
             extra={"metrics": exec_res.rows, "masks": masks,
@@ -216,8 +253,65 @@ class TrainerBackend:
                    "delay_scales": plan.delay_scales if adaptive else None,
                    "runtime": runtime,
                    "rounds_per_launch": rounds_per_launch,
+                   "metrics_mode": metrics if runtime == "scan" else "chunk",
                    "launches": exec_res.launches,
-                   "host_syncs": exec_res.host_syncs})
+                   "host_syncs": exec_res.host_syncs,
+                   "tap_events": exec_res.tap_events})
+
+    def _run_grid(self, spec: ExperimentSpec, job: TrainJob) -> RunResult:
+        """All grid γ points in one vmapped scan program (the plan's
+        γ-axis): one trainer built at γ_base = gammas[0], per-γ stepsize
+        rows folded into ``plan.grid_scales``, every point scored by the
+        same tail-loss protocol as the sequential loop."""
+        import jax
+        from ..runtime import PlanExecutor
+
+        t0 = time.time()
+        policy: StepsizePolicy = spec.stepsize
+        gammas = policy.gammas
+        tr, cfg, n_groups = self._make_trainer(spec, job, gammas[0],
+                                               adaptive=False)
+        masks, schedule = self.masks_for(spec, n_groups)
+        rounds = min(spec.T, masks.shape[0])
+        plan = compile_plan(schedule, job, rounds=rounds, n_groups=n_groups,
+                            seed=spec.seed, grid_gammas=gammas)
+        _, rounds_per_launch, _ = self.resolve_runtime(spec)
+        ex = PlanExecutor(tr, plan)
+        # scoring needs curves, so the grid lane always reads them back
+        # (one deferred sync for the whole grid)
+        res = ex.run_grid(tr.init_state(jax.random.PRNGKey(spec.seed)),
+                          rounds_per_launch=rounds_per_launch,
+                          metrics="chunk")
+
+        losses = res.metrics["loss"]          # (n_grid, rounds)
+        gnorms = res.metrics["grad_norm"]
+        scores = [float(np.mean(losses[i, -3:])) for i in range(len(gammas))]
+        best = int(np.argmin(scores))
+        grid_info = {g: {"losses": losses[i].astype(np.float64),
+                         "grad_norms": gnorms[i].astype(np.float64),
+                         "score": scores[i]}
+                     for i, g in enumerate(gammas)}
+        best_state = jax.tree_util.tree_map(lambda x: x[best], res.state)
+        best_rows = [{k: float(res.metrics[k][best, q]) for k in res.metrics}
+                     for q in range(rounds)]
+        return RunResult(
+            spec=spec, backend=self.name, x=best_state,
+            log_ts=np.arange(rounds),
+            losses=losses[best].astype(np.float64),
+            grad_norms=gnorms[best].astype(np.float64),
+            gamma=float(gammas[best]), grid=grid_info, schedule=schedule,
+            trace=summarize(schedule), seconds=time.time() - t0,
+            extra={"metrics": best_rows, "masks": masks,
+                   "arch": cfg.name, "n_groups": n_groups,
+                   "update_impl": tr.update_impl,
+                   "delay_scales": None,
+                   "runtime": "scan", "grid_lane": True,
+                   "n_grid": len(gammas),
+                   "rounds_per_launch": rounds_per_launch,
+                   "metrics_mode": "chunk",
+                   "launches": res.launches,
+                   "host_syncs": res.host_syncs,
+                   "tap_events": res.tap_events})
 
 
 class ServeBackend:

@@ -189,9 +189,18 @@ class ExperimentSpec:
       one host sync per round; the parity oracle).  ``None`` defers to the
       backend's own default; simulator/serve backends ignore both fields,
       so one spec object still describes any tier.
+    * ``metrics`` — how scan-runtime metrics reach the host: ``"chunk"``
+      (read back at chunk boundaries — the default; ``on_step`` sees the
+      end-of-chunk state, checkpoint barriers work), ``"tap"`` (streamed
+      per round through a device-side io_callback — live logging at any
+      ``rounds_per_launch``, but ``on_step`` receives ``state=None``) or
+      ``"none"`` (discarded on device — fastest, no curves).  ``None``
+      defers to the backend default; ignored by the eager runtime and the
+      other tiers.
     """
 
     RUNTIMES = (None, "scan", "eager")
+    METRIC_MODES = (None, "chunk", "tap", "none")
 
     scheduler: str = "pure"
     timing: str = "fixed:slow=5"
@@ -206,6 +215,7 @@ class ExperimentSpec:
     seed: int = 0
     runtime: Optional[str] = None       # None → backend default ("scan")
     rounds_per_launch: int = 8          # scan runtime: K rounds per launch
+    metrics: Optional[str] = None       # None → backend default ("chunk")
 
     def __post_init__(self):
         object.__setattr__(self, "stepsize",
@@ -214,6 +224,10 @@ class ExperimentSpec:
             raise ValueError(
                 f"unknown runtime {self.runtime!r}; want one of "
                 f"{[r for r in self.RUNTIMES if r]} (or None)")
+        if self.metrics not in self.METRIC_MODES:
+            raise ValueError(
+                f"unknown metrics mode {self.metrics!r}; want one of "
+                f"{[m for m in self.METRIC_MODES if m]} (or None)")
         if self.rounds_per_launch < 1:
             raise ValueError("rounds_per_launch must be >= 1")
         if self.speeds is not None:

@@ -54,6 +54,15 @@ def main():
                     help="scan runtime: rounds per XLA launch; on_step "
                          "logging and --ckpt-every barriers fire at these "
                          "chunk boundaries")
+    ap.add_argument("--metrics", default="chunk",
+                    choices=["chunk", "tap", "none"],
+                    help="scan metric transport: 'chunk' reads curves "
+                         "back at chunk boundaries (checkpoint barriers "
+                         "work); 'tap' streams every round through a "
+                         "device-side io_callback (live logging at any "
+                         "--rounds-per-launch, but no state for "
+                         "checkpoints); 'none' discards metrics on device "
+                         "(fastest, final state only)")
     ap.add_argument("--sync", action="store_true")
     ap.add_argument("--host-mesh", action="store_true",
                     help="use this host's devices instead of the 16x16 pod")
@@ -93,14 +102,15 @@ def main():
         scheduler=scheduler, timing=f"{args.pattern}:slow=6",
         objective=job, T=args.steps, n_workers=args.n_groups or None,
         stepsize=stepsize, seed=args.seed, runtime=args.runtime,
-        rounds_per_launch=args.rounds_per_launch)
+        rounds_per_launch=args.rounds_per_launch, metrics=args.metrics)
 
     print(f"arch={cfg.name} params={n_params(cfg)/1e6:.1f}M "
           f"mesh={dict(mesh.shape)} groups={args.n_groups or 'auto'} "
           f"scheduler={args.scheduler} b={args.wait_b} "
           f"delay={0 if args.sync else args.delay_rounds} "
           f"update_impl={args.update_impl} runtime={args.runtime}"
-          + (f" K={args.rounds_per_launch}" if args.runtime == "scan" else ""))
+          + (f" K={args.rounds_per_launch} metrics={args.metrics}"
+             if args.runtime == "scan" else ""))
 
     if (args.runtime == "scan" and args.ckpt and args.ckpt_every
             and args.ckpt_every % args.rounds_per_launch):
@@ -108,20 +118,37 @@ def main():
               f"of --rounds-per-launch={args.rounds_per_launch}; scan "
               f"checkpoints hold the END-of-chunk state, so off-boundary "
               f"saves are mislabelled — align the two for exact resume")
+    if (args.runtime == "scan" and args.metrics != "chunk"
+            and args.ckpt and args.ckpt_every):
+        print(f"warning: --metrics={args.metrics} never materialises "
+              f"mid-run state on host, so --ckpt-every barriers cannot "
+              f"fire; only the final checkpoint will be written (use "
+              f"--metrics chunk for periodic checkpoints)")
 
     def on_step(i, state, m):
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss={m['loss']:.4f} "
                   f"|g|={m['grad_norm']:.3f} "
                   f"part={m['participation']:.2f}", flush=True)
-        if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+        # the tap transport streams values only (state is None there)
+        if state is not None and args.ckpt and args.ckpt_every \
+                and (i + 1) % args.ckpt_every == 0:
             checkpoint.save(args.ckpt, state, step=i + 1,
                             meta={"arch": cfg.name})
 
-    backend = TrainerBackend(mesh=mesh, rules=rules, on_step=on_step)
+    # only the scan runtime honours --metrics; eager keeps its per-round
+    # callbacks (the executor rejects on_step solely for scan + "none")
+    strip_on_step = args.metrics == "none" and args.runtime == "scan"
+    backend = TrainerBackend(
+        mesh=mesh, rules=rules,
+        on_step=None if strip_on_step else on_step)
     res = backend.run(spec)
-    print(f"done in {res.seconds:.1f}s  final loss={res.losses[-1]:.4f}  "
-          f"tau_max={res.trace['tau_max']}")
+    final = "n/a" if res.losses is None else f"{res.losses[-1]:.4f}"
+    print(f"done in {res.seconds:.1f}s  final loss={final}  "
+          f"tau_max={res.trace['tau_max']}  "
+          f"launches={res.extra['launches']} "
+          f"host_syncs={res.extra['host_syncs']} "
+          f"tap_events={res.extra['tap_events']}")
     if args.ckpt:
         checkpoint.save(args.ckpt, res.x, step=args.steps,
                         meta={"arch": cfg.name})

@@ -6,8 +6,14 @@ Two layers:
   device-resident :class:`RunPlan` (stacked round masks, per-round delay
   scales, folded per-round PRNG data keys, static batch-synthesis tables),
 * :mod:`~repro.runtime.executor` replays the plan — ``runtime="scan"``
-  runs K rounds per XLA launch with ``jax.lax.scan`` (one host sync per
-  chunk), ``runtime="eager"`` is the one-launch-per-round parity oracle.
+  runs K rounds per XLA launch with ``jax.lax.scan`` (metrics streamed
+  per round via an io_callback tap, read back per chunk, or discarded:
+  ``metrics="tap"|"chunk"|"none"``; chunks overlap whenever the host
+  does not need values mid-run), ``runtime="eager"`` is the
+  one-launch-per-round parity oracle.  Plans compiled with
+  ``grid_gammas=...`` carry a γ-axis that
+  :meth:`~repro.runtime.PlanExecutor.run_grid` vmaps over — the whole
+  stepsize grid in one compiled program.
 
 ``TrainerBackend`` drives both through :func:`execute`; they are also
 usable directly against any ``AsyncTrainer``::
@@ -17,11 +23,13 @@ usable directly against any ``AsyncTrainer``::
                   runtime="scan", rounds_per_launch=16)
 """
 from .plan import RunPlan, compile_plan, fold_data_keys
-from .executor import (METRICS, RUNTIMES, ExecResult, PlanExecutor, execute,
-                       make_batch_fn, run_eager, run_scan)
+from .executor import (METRICS, METRIC_MODES, RUNTIMES, ExecResult,
+                       ExecStats, PlanExecutor, execute, make_batch_fn,
+                       run_eager, run_grid, run_scan)
 
 __all__ = [
     "RunPlan", "compile_plan", "fold_data_keys",
-    "METRICS", "RUNTIMES", "ExecResult", "PlanExecutor", "execute",
-    "make_batch_fn", "run_eager", "run_scan",
+    "METRICS", "METRIC_MODES", "RUNTIMES", "ExecResult", "ExecStats",
+    "PlanExecutor", "execute", "make_batch_fn", "run_eager", "run_grid",
+    "run_scan",
 ]

@@ -1,19 +1,40 @@
-"""Compiled whole-run executor: K rounds per XLA launch via ``lax.scan``.
+"""Streaming whole-run executor: K rounds per XLA launch, three metric paths.
 
 The eager dispatch loop pays three per-round costs the hardware never asked
 for: a Python dispatch of the jitted step, a host-built batch shipped to
-device, and a device→host sync to read the metrics.  This module removes
-all three — the :class:`RunPlan` is device-resident, batches are
-synthesised on device from the plan's folded PRNG keys, and metrics
-accumulate into an on-device ``(K, n_metrics)`` buffer (the stacked ys of
-the scan) that crosses to host ONCE per chunk.
+device, and a device→host sync to read the metrics.  The scan executor
+removes all three — the :class:`RunPlan` is device-resident, batches are
+synthesised on device from the plan's folded PRNG keys, and how metrics
+reach the host is the ``metrics`` mode:
+
+* ``"chunk"`` (default) — metrics accumulate into the stacked ys of the
+  scan and cross to host once per chunk.  With an ``on_step`` callback the
+  host blocks on every chunk (the PR-4 path: callbacks see values, so the
+  readback is the barrier); WITHOUT a callback the host never blocks
+  mid-run — chunk c+1 is enqueued while chunk c executes (the carry is
+  donated, so XLA chains the launches) and all metric buffers are read
+  back at the end in ONE sync.
+* ``"tap"`` — a :func:`jax.experimental.io_callback` inside the scan body
+  streams each round's metric row to the host as the device reaches it.
+  ``on_step`` fires per ROUND (not per chunk) with no readback barrier at
+  all, which is what lets ``rounds_per_launch`` grow to the whole run
+  while keeping live logging.  The callback sees metric values only — the
+  mid-scan train state never materialises on host, so ``on_step`` receives
+  ``state=None`` (checkpoint barriers need ``"chunk"``).
+* ``"none"`` — the scan body discards metrics entirely: zero host syncs,
+  zero tap events, the fastest path when only the final state matters.
 
 ``rounds_per_launch`` (K) is the dispatch-vs-control-granularity trade-off:
+K = 1 degenerates to eager dispatch, K = rounds is one launch for the whole
+run, and intermediate K bounds retrace cost and (in ``"chunk"`` mode) sets
+the ``on_step``/checkpoint barrier cadence.
 
-* K = 1 degenerates to eager dispatch (one launch per round),
-* K = rounds is one launch for the whole run (no callbacks until the end),
-* intermediate K keeps ``on_step`` callbacks and checkpoint barriers firing
-  every K rounds while amortising dispatch K×.
+:func:`PlanExecutor.run_grid` is the vmapped γ-grid lane: a plan compiled
+with a γ-axis (``compile_plan(..., grid_gammas=...)``) executes ALL grid
+points in one compiled program — the chunk body is ``vmap``-ed over the
+per-γ state and per-γ stepsize scales while the plan's masks, keys and
+synthesised batches stay shared, exactly mirroring the simulator tier's
+batched grid search.
 
 :func:`run_eager` is the same plan executed one round per launch — the
 parity oracle the scan executor is gated against (same step function, same
@@ -32,22 +53,74 @@ from .plan import RunPlan
 #: returned by ``AsyncTrainer.train_step_fn``
 METRICS = ("loss", "ce", "aux", "grad_norm", "participation")
 
+#: metric transport modes of the scan executor
+METRIC_MODES = ("chunk", "tap", "none")
+
+
+@dataclasses.dataclass
+class ExecStats:
+    """Honest dispatch accounting, one counter per mechanism.
+
+    * ``launches`` — XLA dispatches of the train step / chunk program.
+      The eager loop's separate batch-synthesis jit is NOT counted (it is
+      a synthesis detail, not a round dispatch — the scan executor fuses
+      it into the chunk, so counting it would make the eager/scan columns
+      incomparable).
+    * ``host_syncs`` — times the host BLOCKED on a device→host metric
+      readback mid-run (eager: every round; scan ``"chunk"`` with
+      ``on_step``: every chunk; scan ``"chunk"`` without ``on_step``: one
+      deferred readback at the end; ``"tap"``/``"none"``: zero — the
+      end-of-run ``block_until_ready`` on the carried state is a
+      completion barrier, not a metric transfer).
+    * ``tap_events`` — metric rows streamed host-ward by the io_callback
+      tap (one per round in ``"tap"`` mode, zero otherwise).
+    """
+
+    launches: int = 0
+    host_syncs: int = 0
+    tap_events: int = 0
+
 
 @dataclasses.dataclass
 class ExecResult:
-    """Final carried state + per-round metric curves (host numpy)."""
+    """Final carried state + per-round metric curves (host numpy).
+
+    ``metrics`` maps each name in :data:`METRICS` to a ``(rounds,)`` array
+    — or ``(n_grid, rounds)`` for :meth:`PlanExecutor.run_grid` results —
+    and is EMPTY under ``metrics="none"``.
+    """
 
     state: object
-    metrics: dict            # name -> (rounds,) np.ndarray, keys = METRICS
-    launches: int = 0        # XLA dispatches issued
-    host_syncs: int = 0      # device→host metric transfers
+    metrics: dict
+    stats: ExecStats = dataclasses.field(default_factory=ExecStats)
+
+    # convenience views (older call sites and the benches read these)
+    @property
+    def launches(self) -> int:
+        return self.stats.launches
+
+    @property
+    def host_syncs(self) -> int:
+        return self.stats.host_syncs
+
+    @property
+    def tap_events(self) -> int:
+        return self.stats.tap_events
 
     @property
     def rows(self) -> list:
-        """Metrics as one dict per round (the eager loop's legacy shape)."""
-        n = len(next(iter(self.metrics.values()))) if self.metrics else 0
+        """Metrics as one dict per round (the eager loop's legacy shape).
+        Only defined for single-run (1-D) curves — grid results keep the
+        (n_grid, rounds) arrays."""
+        if not self.metrics:
+            return []
+        first = next(iter(self.metrics.values()))
+        if first.ndim != 1:
+            raise ValueError(
+                "rows is a single-run view; grid results carry "
+                f"(n_grid, rounds) curves (got shape {first.shape})")
         return [{k: float(v[i]) for k, v in self.metrics.items()}
-                for i in range(n)]
+                for i in range(len(first))]
 
 
 def make_batch_fn(plan: RunPlan, cfg) -> Callable:
@@ -92,6 +165,10 @@ def _metrics_row(m: dict):
     return jnp.stack([jnp.asarray(m[k], jnp.float32) for k in METRICS])
 
 
+def _row_dict(row) -> dict:
+    return {k: float(v) for k, v in zip(METRICS, row)}
+
+
 def _chunk_bounds(rounds: int, rounds_per_launch: int, start: int):
     k = max(int(rounds_per_launch), 1)
     lo = start
@@ -101,13 +178,13 @@ def _chunk_bounds(rounds: int, rounds_per_launch: int, start: int):
         lo = hi
 
 
-
 class PlanExecutor:
     """Holds the compiled artifacts for one (trainer × plan): build once,
-    run many.  The jitted chunk function is cached on the instance, so
-    repeated runs (benchmark warm timings, grid restarts, resumed runs)
-    pay tracing/compilation only on first use per chunk length — a fresh
-    closure per run would silently recompile every time.
+    run many.  The jitted chunk programs are cached on the instance (one
+    per metric mode, plus one per grid width), so repeated runs
+    (benchmark warm timings, grid restarts, resumed runs) pay
+    tracing/compilation only on first use per (mode, chunk length) — a
+    fresh closure per run would silently recompile every time.
     """
 
     def __init__(self, trainer, plan: RunPlan, *, donate: bool = True):
@@ -119,90 +196,323 @@ class PlanExecutor:
         self.donate = donate
         self._batch_of = make_batch_fn(plan, trainer.cfg)
         self._repl = NamedSharding(trainer.mesh, P())   # plan slices
-        self._eager = None           # lazily built parity-oracle pair
+        self._step = trainer.train_step_fn()
+        self._eager = None            # lazily built parity-oracle pair
+        self._chunk_jits = {}         # metric mode -> jitted chunk
+        self._grid_jits = {}          # (n_grid, mode) -> jitted grid chunk
+        self._stack_jit = None        # cached γ-axis state tiler
+        self._tap_sink = None         # per-run host consumer of tap rows
 
-        step = trainer.train_step_fn()
-        batch_of = self._batch_of
-        repl = self._repl
+    # ------------------------------------------------------------- chunk body
+    def _scan_body(self, *, force_scale: bool = False):
+        """Shared round body: synthesise batch, pin it replicated, step.
 
-        # only an ADAPTIVE plan carries a real per-round γ-scale; for a
-        # neutral plan the step is called 3-arg so the trainer's own
-        # static AsyncConfig.delay_adaptive rule stays in charge (an
-        # explicit all-ones scale would silently override it)
-        adaptive = plan.adaptive
+        The pin matters: GSPMD otherwise propagates the data-axis sharding
+        back into the RNG ops, and legacy (non-partitionable) threefry
+        generates DIFFERENT bits per shard than the replicated generation
+        the eager oracle uses — 2% loss divergence, not FMA noise.
 
-        def chunk(state, masks, keys, scales):
-            def body(st, xs):
-                mask, key, scale = xs
-                # pin the synthesised batch to replicated BEFORE the
-                # step's own constraints reshard it: otherwise GSPMD
-                # propagates the data-axis sharding back into the RNG
-                # ops, and legacy (non-partitionable) threefry generates
-                # DIFFERENT bits per shard than the replicated generation
-                # the eager oracle uses — 2% loss divergence, not FMA
-                # noise
-                batch = jax.tree_util.tree_map(
-                    lambda x: jax.lax.with_sharding_constraint(x, repl),
-                    batch_of(key))
-                st, m = step(st, batch, mask, scale) if adaptive \
-                    else step(st, batch, mask)
+        ``force_scale``: only an ADAPTIVE plan carries a real per-round
+        γ-scale; for a neutral plan the step is called 3-arg so the
+        trainer's own static ``AsyncConfig.delay_adaptive`` rule stays in
+        charge (an explicit all-ones scale would silently override it).
+        The γ-grid lane forces the 4-arg step — its scale rows ARE the
+        whole stepsize policy per grid point.
+        """
+        import jax
+
+        step, batch_of, repl = self._step, self._batch_of, self._repl
+        with_scale = self.plan.adaptive or force_scale
+
+        def body(st, xs):
+            _, mask, key, scale = xs
+            batch = jax.tree_util.tree_map(
+                lambda x: jax.lax.with_sharding_constraint(x, repl),
+                batch_of(key))
+            st, m = step(st, batch, mask, scale) if with_scale \
+                else step(st, batch, mask)
+            return st, m
+
+        return body
+
+    def _emit_tap(self, idx, row):
+        """Host side of the io_callback tap (bound once so the jitted
+        program is stable across runs; the per-run consumer swaps in via
+        ``_tap_sink``)."""
+        sink = self._tap_sink
+        if sink is not None:
+            sink(int(idx), np.asarray(row))
+
+    def _chunk_jit(self, mode: str):
+        """Jitted ``chunk(state, idx, masks, keys, scales)`` for one metric
+        mode; ``"chunk"`` additionally returns the stacked metric rows."""
+        if mode in self._chunk_jits:
+            return self._chunk_jits[mode]
+        import jax
+        from jax.experimental import io_callback
+
+        body = self._scan_body()
+        emit = self._emit_tap
+
+        def round_fn(st, xs):
+            st, m = body(st, xs)
+            if mode == "chunk":
                 return st, _metrics_row(m)
+            if mode == "tap":
+                # ordered: rows must reach the host in round order (the
+                # sink builds the curve and fires on_step sequentially)
+                io_callback(emit, None, xs[0], _metrics_row(m),
+                            ordered=True)
+            return st, None
 
-            return jax.lax.scan(body, state, (masks, keys, scales))
+        def chunk(state, idx, masks, keys, scales):
+            state, ys = jax.lax.scan(round_fn, state,
+                                     (idx, masks, keys, scales))
+            return (state, ys) if mode == "chunk" else state
 
-        state_sh = trainer.state_shardings()
-        self._chunk_jit = jax.jit(
+        state_sh = self.trainer.state_shardings()
+        repl = self._repl
+        fn = jax.jit(
             chunk,
-            in_shardings=(state_sh, repl, repl, repl),
-            out_shardings=(state_sh, None),
-            donate_argnums=(0,) if donate else ())
+            in_shardings=(state_sh, repl, repl, repl, repl),
+            out_shardings=(state_sh, None) if mode == "chunk" else state_sh,
+            donate_argnums=(0,) if self.donate else ())
+        self._chunk_jits[mode] = fn
+        return fn
+
+    def _grid_jit(self, n_grid: int, mode: str):
+        """Jitted ``chunk(states, idx, masks, keys, grid_scales)`` vmapped
+        over the γ-axis: states carry a leading ``(n_grid,)`` axis,
+        ``grid_scales`` is ``(n_grid, K)``, and masks/keys/batches are
+        shared across grid points (the ordering and the data stream do not
+        depend on γ — the same observation behind the simulator tier's
+        batched ``replay_grid``)."""
+        key = (n_grid, mode)
+        if key in self._grid_jits:
+            return self._grid_jits[key]
+        import jax
+
+        body = self._scan_body(force_scale=True)
+
+        def one_gamma(st, scales, idx, masks, keys):
+            def round_fn(s, xs):
+                s, m = body(s, xs)
+                return s, (_metrics_row(m) if mode == "chunk" else None)
+
+            return jax.lax.scan(round_fn, st, (idx, masks, keys, scales))
+
+        def chunk(states, idx, masks, keys, grid_scales):
+            states, ys = jax.vmap(
+                one_gamma, in_axes=(0, 0, None, None, None))(
+                    states, grid_scales, idx, masks, keys)
+            return (states, ys) if mode == "chunk" else states
+
+        fn = jax.jit(chunk, donate_argnums=(0,) if self.donate else ())
+        self._grid_jits[key] = fn
+        return fn
+
+    def _slices(self, lo: int, hi: int):
+        import jax.numpy as jnp
+
+        idx = jnp.arange(lo, hi, dtype=jnp.int32)
+        return (idx,) + self.plan.device_slices(lo, hi)
 
     # ------------------------------------------------------------------ scan
     def run_scan(self, state, *, rounds_per_launch: int = 8,
+                 metrics: str = "chunk",
                  on_step: Optional[Callable] = None,
                  start_round: int = 0) -> ExecResult:
         """Execute plan rounds ``[start_round, rounds)``, K per launch.
 
         One XLA launch covers K = ``rounds_per_launch`` rounds; the
         carried state is donated launch-to-launch (the chunk's input
-        buffers are reused, so state never doubles in memory).
-        ``on_step(i, state, metrics_i)`` fires for every completed
-        round — but only at chunk boundaries, with the END-of-chunk state
-        (checkpoint barriers therefore land on multiples of K; align
-        ``ckpt_every`` with K for exact-resume semantics).  A ragged tail
-        (``rounds % K != 0``) costs at most one extra compile for the
+        buffers are reused, so state never doubles in memory).  A ragged
+        tail (``rounds % K != 0``) costs at most one extra compile for the
         remainder length.
+
+        ``metrics`` selects the transport (module docstring):
+
+        * ``"chunk"`` — ``on_step(i, state, metrics_i)`` fires for every
+          round at chunk boundaries with the END-of-chunk state
+          (checkpoint barriers land on multiples of K; align
+          ``ckpt_every`` with K for exact-resume semantics).  Without
+          ``on_step`` the host never blocks mid-run: chunks overlap and
+          ONE deferred readback at the end assembles the curves.
+        * ``"tap"`` — ``on_step(i, None, metrics_i)`` fires per round from
+          the device-side tap; no mid-run readback, state is not
+          available to the callback.
+        * ``"none"`` — no metrics at all (``on_step`` is rejected).
 
         ``start_round > 0`` resumes mid-plan: the data keys are a pure
         function of (seed, round), so a restored run regenerates the
         identical batch stream.
         """
+        import jax
+
+        if metrics not in METRIC_MODES:
+            raise ValueError(f"unknown metrics mode {metrics!r}; want one "
+                             f"of {METRIC_MODES}")
+        if metrics == "none" and on_step is not None:
+            raise ValueError(
+                'metrics="none" discards metrics on device; an on_step '
+                'callback would never fire — use "tap" or "chunk"')
         plan = self.plan
-        rows, launches = [], 0
-        for lo, hi in _chunk_bounds(plan.rounds, rounds_per_launch,
-                                    start_round):
-            state, ms = self._chunk_jit(state, *plan.device_slices(lo, hi))
-            ms = np.asarray(ms)           # ONE host sync per chunk
-            rows.append(ms)
-            launches += 1
+        fn = self._chunk_jit(metrics)
+        stats = ExecStats()
+        bounds = list(_chunk_bounds(plan.rounds, rounds_per_launch,
+                                    start_round))
+        n_rounds = plan.rounds - start_round
+
+        if metrics == "tap":
+            tap_rows = {}
+
+            def sink(i, row):
+                tap_rows[i] = row
+                stats.tap_events += 1
+                if on_step is not None:
+                    on_step(i, None, _row_dict(row))
+
+            self._tap_sink = sink
+            try:
+                for lo, hi in bounds:
+                    state = fn(state, *self._slices(lo, hi))
+                    stats.launches += 1
+                # completion barrier (not a metric transfer): flushes the
+                # enqueued chunks, then drains the callback queue — array
+                # readiness alone does NOT guarantee pending io_callbacks
+                # have run on every backend
+                state = jax.block_until_ready(state)
+                jax.effects_barrier()
+            finally:
+                self._tap_sink = None
+            if len(tap_rows) != n_rounds:
+                raise RuntimeError(
+                    f"metrics tap delivered {len(tap_rows)}/{n_rounds} "
+                    f"rows — an io_callback was dropped or the run was "
+                    f"interrupted mid-chunk")
+            all_ms = (np.stack([tap_rows[i] for i in
+                                range(start_round, plan.rounds)])
+                      if n_rounds else np.zeros((0, len(METRICS)),
+                                                np.float32))
+            return ExecResult(
+                state=state,
+                metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
+                stats=stats)
+
+        if metrics == "none":
+            for lo, hi in bounds:
+                state = fn(state, *self._slices(lo, hi))
+                stats.launches += 1
+            state = jax.block_until_ready(state)
+            return ExecResult(state=state, metrics={}, stats=stats)
+
+        # metrics == "chunk"
+        rows = []
+        for lo, hi in bounds:
+            state, ms = fn(state, *self._slices(lo, hi))
+            stats.launches += 1
             if on_step is not None:
+                ms = np.asarray(ms)          # blocking readback per chunk
+                stats.host_syncs += 1
                 for i in range(lo, hi):
-                    on_step(i, state,
-                            {k: float(v)
-                             for k, v in zip(METRICS, ms[i - lo])})
-        all_ms = np.concatenate(rows, axis=0) if rows else \
-            np.zeros((0, len(METRICS)), np.float32)
+                    on_step(i, state, _row_dict(ms[i - lo]))
+            rows.append(ms)                  # device buffer when deferred
+        if on_step is None and rows:
+            # overlapped path: every chunk is already enqueued; block once
+            # and read all metric buffers back in one sync point
+            rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
+            stats.host_syncs = 1
+        state = jax.block_until_ready(state)
+        all_ms = np.concatenate([np.asarray(r) for r in rows], axis=0) \
+            if rows else np.zeros((0, len(METRICS)), np.float32)
         return ExecResult(
             state=state,
             metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
-            launches=launches, host_syncs=launches)
+            stats=stats)
+
+    # ------------------------------------------------------------------ grid
+    def stack_state(self, state):
+        """Tile one initial state with a leading ``(n_grid,)`` axis — every
+        grid point starts from the same iterate, as in the sequential
+        grid search.  The tiler jit is cached on the executor: a fresh
+        closure per call would retrace (and recompile) every run."""
+        import jax
+        import jax.numpy as jnp
+
+        if self._stack_jit is None:
+            g = self.plan.n_grid
+            self._stack_jit = jax.jit(lambda s: jax.tree_util.tree_map(
+                lambda x: jnp.repeat(x[None], g, axis=0), s))
+        return self._stack_jit(state)
+
+    def run_grid(self, state, *, rounds_per_launch: int = 8,
+                 metrics: str = "chunk",
+                 start_round: int = 0) -> ExecResult:
+        """Execute ALL grid points of a γ-axis plan in one compiled
+        program per chunk (vmap over γ).
+
+        ``state`` may be a single trainer state (tiled via
+        :meth:`stack_state`) or an already-stacked ``(n_grid, ...)`` tree
+        (a resumed grid run).  Metrics come back as ``(n_grid, rounds)``
+        curves under ``"chunk"`` (deferred single readback — there is no
+        per-γ ``on_step``; the grid lane is a search, not a logging loop)
+        or not at all under ``"none"``.  ``"tap"`` is rejected: io_callback
+        rows interleave unordered across vmapped lanes, so a per-round
+        stream would be misleading.
+        """
+        import jax
+
+        plan = self.plan
+        if plan.grid_scales is None:
+            raise ValueError(
+                "plan has no γ-axis; compile it with grid_gammas=... to "
+                "use the grid lane")
+        if metrics not in ("chunk", "none"):
+            raise ValueError(
+                f'grid lane supports metrics="chunk"|"none" (got '
+                f'{metrics!r})')
+        g = plan.n_grid
+        fn = self._grid_jit(g, metrics)
+        # single vs already-stacked state: every AsyncTrainer state carries
+        # a scalar "step" counter, so a vectorised one shows ndim == 1
+        if isinstance(state, dict) and "step" in state:
+            stacked = getattr(state["step"], "ndim", 0) == 1
+        else:
+            leaves = jax.tree_util.tree_leaves(state)
+            stacked = bool(leaves) and \
+                getattr(leaves[0], "shape", ())[:1] == (g,)
+        states = state if stacked else self.stack_state(state)
+
+        stats = ExecStats()
+        rows = []
+        for lo, hi in _chunk_bounds(plan.rounds, rounds_per_launch,
+                                    start_round):
+            idx, masks, keys, _ = self._slices(lo, hi)
+            scales = plan.grid_slice(lo, hi)
+            out = fn(states, idx, masks, keys, scales)
+            states, ms = out if metrics == "chunk" else (out, None)
+            stats.launches += 1
+            if ms is not None:
+                rows.append(ms)
+        if rows:
+            rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
+            stats.host_syncs = 1
+        states = jax.block_until_ready(states)
+        all_ms = np.concatenate(rows, axis=1) if rows else None
+        return ExecResult(
+            state=states,
+            metrics=({} if all_ms is None else
+                     {k: all_ms[:, :, j] for j, k in enumerate(METRICS)}),
+            stats=stats)
 
     # ----------------------------------------------------------------- eager
     def run_eager(self, state, *, on_step: Optional[Callable] = None,
                   start_round: int = 0) -> ExecResult:
         """The parity oracle: the same plan, one launch + one host sync
         per round (the pre-runtime dispatch loop, kept as the semantic
-        reference)."""
+        reference).  ``launches`` counts the train-step dispatches; the
+        batch-synthesis jit that precedes each one is a data detail, not a
+        round launch (see :class:`ExecStats`)."""
         import jax
         import jax.numpy as jnp
 
@@ -216,36 +526,35 @@ class PlanExecutor:
                     with_delay_scale=plan.adaptive))
         batch_of, step = self._eager
         rows = []
+        stats = ExecStats()
         for i in range(start_round, plan.rounds):
             key = jnp.asarray(plan.data_keys[i])
             args = (state, batch_of(key), jnp.asarray(plan.masks[i]))
             if plan.adaptive:       # neutral plans: the trainer's own
                 args += (jnp.float32(plan.delay_scales[i]),)  # static rule
             state, m = step(*args)
+            stats.launches += 1
             row = {k: float(m[k]) for k in METRICS}  # host sync per round
+            stats.host_syncs += 1
             rows.append([row[k] for k in METRICS])
             if on_step is not None:
                 on_step(i, state, row)
         all_ms = np.asarray(rows, np.float32) if rows else \
             np.zeros((0, len(METRICS)), np.float32)
-        n = all_ms.shape[0]
-        # per round the eager loop issues TWO dispatches: the batch-
-        # synthesis jit plus the step jit (the scan executor fuses
-        # synthesis into the chunk, so its count is launches-per-chunk)
         return ExecResult(
             state=state,
             metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
-            launches=2 * n, host_syncs=n)
+            stats=stats)
 
 
 def run_scan(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
-             on_step: Optional[Callable] = None, start_round: int = 0,
-             donate: bool = True) -> ExecResult:
+             metrics: str = "chunk", on_step: Optional[Callable] = None,
+             start_round: int = 0, donate: bool = True) -> ExecResult:
     """One-shot convenience over :meth:`PlanExecutor.run_scan` (compiles
     fresh; hold a :class:`PlanExecutor` to reuse compiled chunks)."""
     return PlanExecutor(trainer, plan, donate=donate).run_scan(
-        state, rounds_per_launch=rounds_per_launch, on_step=on_step,
-        start_round=start_round)
+        state, rounds_per_launch=rounds_per_launch, metrics=metrics,
+        on_step=on_step, start_round=start_round)
 
 
 def run_eager(trainer, plan: RunPlan, state, *,
@@ -256,15 +565,28 @@ def run_eager(trainer, plan: RunPlan, state, *,
         state, on_step=on_step, start_round=start_round)
 
 
+def run_grid(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
+             metrics: str = "chunk", start_round: int = 0,
+             donate: bool = True) -> ExecResult:
+    """One-shot convenience over :meth:`PlanExecutor.run_grid`."""
+    return PlanExecutor(trainer, plan, donate=donate).run_grid(
+        state, rounds_per_launch=rounds_per_launch, metrics=metrics,
+        start_round=start_round)
+
+
 RUNTIMES = {"scan": run_scan, "eager": run_eager}
 
 
 def execute(trainer, plan: RunPlan, state, *, runtime: str = "scan",
-            rounds_per_launch: int = 8, **kw) -> ExecResult:
-    """Dispatch on ``runtime`` (`"scan"` | `"eager"`)."""
+            rounds_per_launch: int = 8, metrics: str = "chunk",
+            **kw) -> ExecResult:
+    """Dispatch on ``runtime`` (`"scan"` | `"eager"`).  ``metrics`` applies
+    to the scan runtime only — eager reads every round back by
+    construction."""
     if runtime not in RUNTIMES:
         raise ValueError(
             f"unknown runtime {runtime!r}; want one of {sorted(RUNTIMES)}")
     if runtime == "scan":
         kw["rounds_per_launch"] = rounds_per_launch
+        kw["metrics"] = metrics
     return RUNTIMES[runtime](trainer, plan, state, **kw)

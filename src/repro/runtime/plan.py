@@ -23,7 +23,7 @@ eager-vs-scan parity a meaningful gate.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -50,6 +50,13 @@ class RunPlan:
       sampling via ``searchsorted``),
     * ``group_perms`` — ``(n_groups, vocab)`` int32 group-specific vocab
       permutations (the heterogeneity ζ² knob).
+
+    ``grid_scales`` is the optional γ-axis: ``(n_grid, rounds)`` f32
+    per-round stepsize scales, one row per grid point
+    (``γ_g/γ_base × delay_scales``) — what the executor's vmapped
+    :meth:`~repro.runtime.PlanExecutor.run_grid` lane scans over.  The
+    ordering, masks and data keys are γ-independent, so one plan serves
+    the whole grid.
     """
 
     masks: np.ndarray
@@ -61,6 +68,7 @@ class RunPlan:
     seq_len: int
     seed: int
     adaptive: bool = False
+    grid_scales: Optional[np.ndarray] = None
 
     @property
     def rounds(self) -> int:
@@ -73,6 +81,12 @@ class RunPlan:
     @property
     def vocab(self) -> int:
         return int(self.token_cdf.shape[0])
+
+    @property
+    def n_grid(self) -> int:
+        """Grid points on the γ-axis (0 when the plan has none)."""
+        return 0 if self.grid_scales is None \
+            else int(self.grid_scales.shape[0])
 
     def __post_init__(self):
         if self.masks.shape[0] != self.delay_scales.shape[0] or \
@@ -89,6 +103,14 @@ class RunPlan:
             raise ValueError(
                 f"the {self.n_groups} groups must divide "
                 f"global_batch={self.global_batch}")
+        if self.grid_scales is not None and (
+                self.grid_scales.ndim != 2
+                or self.grid_scales.shape[1] != self.masks.shape[0]
+                or not self.grid_scales.shape[0]):
+            raise ValueError(
+                f"grid_scales must be (n_grid >= 1, rounds="
+                f"{self.masks.shape[0]}); got "
+                f"{self.grid_scales.shape}")
 
     # ------------------------------------------------------------------ views
     def device_slices(self, lo: int = 0, hi: Optional[int] = None):
@@ -101,11 +123,20 @@ class RunPlan:
                 jnp.asarray(self.data_keys[lo:hi]),
                 jnp.asarray(self.delay_scales[lo:hi]))
 
+    def grid_slice(self, lo: int = 0, hi: Optional[int] = None):
+        """``(n_grid, hi-lo)`` per-γ scale columns for one chunk launch."""
+        import jax.numpy as jnp
+
+        if self.grid_scales is None:
+            raise ValueError("plan has no γ-axis (grid_scales is None)")
+        hi = self.rounds if hi is None else hi
+        return jnp.asarray(self.grid_scales[:, lo:hi])
+
     def summary(self) -> dict:
         return {"rounds": self.rounds, "n_groups": self.n_groups,
                 "vocab": self.vocab, "global_batch": self.global_batch,
                 "seq_len": self.seq_len, "seed": self.seed,
-                "adaptive": self.adaptive}
+                "adaptive": self.adaptive, "n_grid": self.n_grid}
 
 
 def fold_data_keys(seed: int, rounds: int) -> np.ndarray:
@@ -124,7 +155,9 @@ def fold_data_keys(seed: int, rounds: int) -> np.ndarray:
 
 def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
                  n_groups: Optional[int] = None, seed: int = 0,
-                 adaptive: bool = False) -> RunPlan:
+                 adaptive: bool = False,
+                 grid_gammas: Optional[Sequence[float]] = None,
+                 base_gamma: Optional[float] = None) -> RunPlan:
     """Lower ``(schedule, job)`` to a :class:`RunPlan`.
 
     ``job`` is a :class:`repro.api.TrainJob` (anything exposing
@@ -134,6 +167,13 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
     realised buffering depth is 1 round whenever ``delay_rounds > 0``
     (AsyncTrainer's single swapped-every-round gbuf — see
     :func:`repro.core.round_delay_scales`).
+
+    ``grid_gammas`` adds the γ-axis: one ``grid_scales`` row per grid
+    point, ``γ_g / base_gamma`` (default ``base_gamma = grid_gammas[0]``,
+    the lr the executing trainer was built with) times the per-round
+    scales — the optimizer applies ``lr · scale`` everywhere, so scaling
+    the scale IS running at γ_g.  Every row folds the whole stepsize
+    policy in, so the grid lane always calls the explicit 4-arg step.
     """
     from ..data import DataConfig, HeterogeneousTokenPipeline
 
@@ -142,6 +182,14 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
         schedule, rounds,
         delay_rounds=1 if getattr(job, "delay_rounds", 0) > 0 else 0,
         adaptive=adaptive)
+    grid_scales = None
+    if grid_gammas is not None:
+        g = np.asarray([float(x) for x in grid_gammas], np.float32)
+        if g.ndim != 1 or not g.size:
+            raise ValueError("grid_gammas must be a non-empty 1-D sequence")
+        base = np.float32(base_gamma if base_gamma is not None else g[0])
+        grid_scales = ((g / base)[:, None]
+                       * scales[None, :]).astype(np.float32)
     cfg = job.make_arch()
     pipe = HeterogeneousTokenPipeline(DataConfig(
         vocab=cfg.vocab, seq_len=job.seq_len, global_batch=job.global_batch,
@@ -153,4 +201,4 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
         token_cdf=np.cumsum(pipe.pmf).astype(np.float32),
         group_perms=np.stack(pipe.perms).astype(np.int32),
         global_batch=job.global_batch, seq_len=job.seq_len,
-        seed=seed, adaptive=adaptive)
+        seed=seed, adaptive=adaptive, grid_scales=grid_scales)

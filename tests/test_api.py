@@ -275,18 +275,96 @@ def test_result_json_roundtrip_simulator_grid():
     assert r2.spec["scheduler"] == "shuffled"
 
 
+def test_result_json_version_mismatch_rejected():
+    """An archive from a different payload layout must fail loudly, not
+    deserialize into silently-wrong fields."""
+    import json
+    from repro.api import RunResult
+
+    res = RunResult(spec=None, backend="simulator",
+                    losses=np.arange(3, dtype=np.float64))
+    good = res.to_json()
+    assert RunResult.from_json(good).backend == "simulator"
+    for bad_version in (0, 999, None, "1"):
+        payload = json.loads(good)
+        payload["version"] = bad_version
+        if bad_version is None:
+            del payload["version"]
+        with pytest.raises(ValueError, match="version"):
+            RunResult.from_json(json.dumps(payload))
+
+
+def test_result_json_big_leaves_become_stubs():
+    """Arrays above the 64k-element cap archive as (shape, dtype, l2)
+    summary stubs — the stub must survive the round trip (and small
+    arrays in the same tree must still round-trip exactly)."""
+    from repro.api import RunResult
+    from repro.api.result import _MAX_ARRAY_ELEMS
+
+    big = np.ones((_MAX_ARRAY_ELEMS + 1,), np.float32)
+    small = np.arange(7, dtype=np.int32)
+    res = RunResult(spec=None, backend="trainer",
+                    extra={"big": big, "small": small})
+    r2 = RunResult.from_json(res.to_json())
+    stub = r2.extra["big"]
+    assert set(stub) == {"__array_summary__"}
+    summ = stub["__array_summary__"]
+    assert summ["shape"] == [_MAX_ARRAY_ELEMS + 1]
+    assert summ["dtype"] == "float32"
+    np.testing.assert_allclose(summ["l2"], np.sqrt(_MAX_ARRAY_ELEMS + 1))
+    np.testing.assert_array_equal(r2.extra["small"], small)
+    assert r2.extra["small"].dtype == np.int32
+    # exactly at the cap: still exact, not a stub
+    at_cap = RunResult(spec=None, backend="trainer",
+                       extra={"edge": np.zeros(_MAX_ARRAY_ELEMS,
+                                               np.float32)})
+    r3 = RunResult.from_json(at_cap.to_json())
+    assert isinstance(r3.extra["edge"], np.ndarray)
+    assert r3.extra["edge"].shape == (_MAX_ARRAY_ELEMS,)
+
+
+def test_result_json_grid_lane_shape_roundtrip():
+    """The grid-lane RunResult layout (per-γ curve dict + lane provenance
+    in extra) archives and restores without a live trainer run."""
+    from repro.api import RunResult
+
+    gammas = (3e-3, 1.5e-3)
+    grid_info = {g: {"losses": np.linspace(4.6, 4.0, 5),
+                     "grad_norms": np.linspace(1.0, 0.5, 5),
+                     "score": 4.0 + i}
+                 for i, g in enumerate(gammas)}
+    res = RunResult(spec=None, backend="trainer",
+                    losses=grid_info[gammas[0]]["losses"],
+                    gamma=gammas[0], grid=grid_info,
+                    extra={"grid_lane": True, "n_grid": 2,
+                           "runtime": "scan", "metrics_mode": "chunk",
+                           "launches": 2, "host_syncs": 1,
+                           "tap_events": 0})
+    r2 = RunResult.from_json(res.to_json())
+    assert set(r2.grid) == set(gammas)          # float keys restored
+    for g in gammas:
+        np.testing.assert_array_equal(r2.grid[g]["losses"],
+                                      grid_info[g]["losses"])
+    assert r2.extra["grid_lane"] is True
+    assert r2.extra["n_grid"] == 2 and r2.extra["tap_events"] == 0
+
+
 def test_spec_carries_runtime_choice():
     """One spec object serves every tier: runtime fields parse/validate on
     the spec, and non-trainer backends simply ignore them."""
     prob = _logreg()
     spec = ExperimentSpec(scheduler="pure", objective=prob, T=30,
                           stepsize=0.01, log_every=10,
-                          runtime="eager", rounds_per_launch=4)
+                          runtime="eager", rounds_per_launch=4,
+                          metrics="tap")
     assert spec.runtime == "eager" and spec.rounds_per_launch == 4
+    assert spec.metrics == "tap"
     res = SimulatorBackend().run(spec)          # ignored, not rejected
     assert res.backend == "simulator"
     with pytest.raises(ValueError, match="runtime"):
         ExperimentSpec(scheduler="pure", objective=prob, runtime="jitless")
+    with pytest.raises(ValueError, match="metrics"):
+        ExperimentSpec(scheduler="pure", objective=prob, metrics="csv")
 
 
 def test_run_dispatches_on_objective():

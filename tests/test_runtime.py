@@ -10,13 +10,20 @@ equality is NOT attainable, rtol=1e-5 + small atol is the contract).
 
 Covered here:
 
-* plan lowering (masks/scales/keys shapes, resume-stable key folding),
+* plan lowering (masks/scales/keys shapes, resume-stable key folding,
+  γ-axis grid_scales),
 * scan-vs-eager curve parity across (scheduler × update_impl ×
   delay-adaptive) combos, including the sync (delay_rounds=0) baseline,
+* the metric transports: per-chunk readback, overlapped deferred readback,
+  the per-round io_callback tap, and metric-free execution — all the same
+  curves, with honest ExecStats (launches / host_syncs / tap_events),
+* the vmapped γ-grid lane: ``run_grid[i]`` ≡ a single-γ scan run on a
+  trainer built at γ_i,
 * chunk-boundary edge cases: ``rounds_per_launch`` of 1, ``rounds``, and a
   ragged ``rounds % K != 0`` split, plus ``on_step`` barrier semantics,
 * checkpoint-resume at a chunk boundary (pooled state) ≡ uninterrupted,
-* ``TrainerBackend`` wiring (spec/constructor runtime resolution), and
+* ``TrainerBackend`` wiring (spec/constructor runtime+metrics resolution,
+  the grid lane end-to-end vs the sequential oracle), and
 * an 8-virtual-device pooled ZeRO-sharded scan run (subprocess
   self-bootstrap on single-device hosts, mirroring
   tests/test_pool_multidevice.py).
@@ -32,9 +39,9 @@ import pytest
 
 from repro.api import ExperimentSpec, RunResult, TrainJob, TrainerBackend
 from repro.core import lower_rounds, round_delay_scales, round_masks
-from repro.runtime import (METRICS, RunPlan, compile_plan, execute,
-                           fold_data_keys, make_batch_fn, run_eager,
-                           run_scan)
+from repro.runtime import (METRICS, PlanExecutor, RunPlan, compile_plan,
+                           execute, fold_data_keys, make_batch_fn,
+                           run_eager, run_grid, run_scan)
 
 MULTI = jax.device_count() >= 8
 
@@ -55,13 +62,13 @@ def _job(**kw):
 
 
 def _spec(job, scheduler="shuffled", T=6, adaptive=False, **kw):
-    stepsize = f"delay_adaptive:{3e-3}" if adaptive else 3e-3
+    kw.setdefault("stepsize",
+                  f"delay_adaptive:{3e-3}" if adaptive else 3e-3)
     return ExperimentSpec(scheduler=scheduler, timing="poisson:slow=6",
-                          objective=job, T=T, n_workers=4,
-                          stepsize=stepsize, seed=0, **kw)
+                          objective=job, T=T, n_workers=4, seed=0, **kw)
 
 
-def _trainer(job, mesh=None):
+def _trainer(job, mesh=None, lr=3e-3):
     from jax.sharding import Mesh
     from repro.distributed import AsyncTrainer, AsyncConfig
     from repro.optim import OptConfig
@@ -71,7 +78,7 @@ def _trainer(job, mesh=None):
                     ("data", "model"))
     tr = AsyncTrainer(
         job.make_arch(), mesh,
-        opt=OptConfig(lr=3e-3, clip_norm=job.clip_norm,
+        opt=OptConfig(lr=lr, clip_norm=job.clip_norm,
                       update_impl=job.update_impl),
         async_cfg=AsyncConfig(delay_rounds=job.delay_rounds))
     tr.n_groups = 4
@@ -183,8 +190,13 @@ def test_scan_matches_eager(scheduler, impl, adaptive, delay_rounds):
     r_e = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
     r_s = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
                    rounds_per_launch=4)               # ragged: 4 + 2
-    assert r_e.launches == 12 and r_e.host_syncs == 6   # batch jit + step jit
-    assert r_s.launches == 2 and r_s.host_syncs == 2
+    # honest accounting: eager = one STEP launch + one blocking metric
+    # readback per round (the batch-synthesis jit is not a round launch);
+    # scan without a callback overlaps chunks and reads back ONCE
+    assert r_e.launches == 6 and r_e.host_syncs == 6
+    assert r_e.tap_events == 0
+    assert r_s.launches == 2 and r_s.host_syncs == 1
+    assert r_s.tap_events == 0
     for k in METRICS:
         np.testing.assert_allclose(r_s.metrics[k], r_e.metrics[k], **TOL,
                                    err_msg=f"metric {k}")
@@ -199,7 +211,8 @@ def test_scan_matches_eager(scheduler, impl, adaptive, delay_rounds):
 def test_chunk_boundary_edge_cases():
     """K=1 (degenerate eager), K=rounds (one launch), ragged K — all the
     same curves; on_step fires once per round, at chunk boundaries, in
-    order."""
+    order.  With a callback the readback blocks every chunk (host_syncs
+    == launches — the callback must see values)."""
     job = _job()
     spec = _spec(job, T=5)
     plan = _plan_for(spec, job)
@@ -217,6 +230,72 @@ def test_chunk_boundary_edge_cases():
         for name in METRICS:
             np.testing.assert_allclose(r.metrics[name], base.metrics[name],
                                        **TOL, err_msg=f"K={k} {name}")
+
+
+# ---------------------------------------------------------------------------
+# metric transports: tap / none / overlapped chunk
+# ---------------------------------------------------------------------------
+def test_metrics_tap_streams_per_round():
+    """The io_callback tap delivers every round's metrics in order with
+    ZERO blocking readbacks, fires on_step per round with state=None
+    (mid-scan state never materialises on host), and the curves match the
+    eager oracle — even at rounds_per_launch == rounds (one launch for
+    the whole run, the configuration a chunk barrier would make
+    log-silent)."""
+    job = _job()
+    spec = _spec(job, T=6)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    base = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
+    seen = []
+    r = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                 rounds_per_launch=6, metrics="tap",
+                 on_step=lambda i, st, m: seen.append((i, st, m["loss"])))
+    assert r.launches == 1 and r.host_syncs == 0 and r.tap_events == 6
+    assert [i for i, _, _ in seen] == list(range(6))
+    assert all(st is None for _, st, _ in seen)
+    np.testing.assert_allclose([l for _, _, l in seen],
+                               base.metrics["loss"], **TOL)
+    for k in METRICS:
+        np.testing.assert_allclose(r.metrics[k], base.metrics[k], **TOL,
+                                   err_msg=f"tap {k}")
+    # ragged chunking under tap: same stream, one tap per round
+    seen2 = []
+    r2 = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                  rounds_per_launch=4, metrics="tap",
+                  on_step=lambda i, st, m: seen2.append(i))
+    assert r2.launches == 2 and r2.tap_events == 6
+    assert seen2 == list(range(6))
+    np.testing.assert_allclose(r2.metrics["loss"], base.metrics["loss"],
+                               **TOL)
+
+
+def test_metrics_none_discards_on_device():
+    """metrics="none": no curves, no syncs, no taps — and an on_step
+    callback is rejected up front (it would silently never fire)."""
+    job = _job()
+    spec = _spec(job, T=4)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    base = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
+    r = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                 rounds_per_launch=2, metrics="none")
+    assert r.metrics == {}
+    assert r.launches == 2 and r.host_syncs == 0 and r.tap_events == 0
+    # the run still trained: final params match the eager oracle's
+    pe = tr.params_of(base.state)
+    pn = tr.params_of(r.state)
+    for a, b in zip(jax.tree_util.tree_leaves(pe),
+                    jax.tree_util.tree_leaves(pn)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-6)
+    with pytest.raises(ValueError, match="on_step"):
+        run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                 metrics="none", on_step=lambda i, st, m: None)
+    with pytest.raises(ValueError, match="unknown metrics"):
+        run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                 metrics="streaming")
 
 
 def test_neutral_plan_honors_trainer_static_delay_rule():
@@ -261,9 +340,111 @@ def test_execute_dispatch_and_unknown_runtime():
     r = execute(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
                 runtime="scan", rounds_per_launch=2)
     assert r.launches == 1
+    r = execute(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                runtime="scan", rounds_per_launch=2, metrics="none")
+    assert r.metrics == {}
     with pytest.raises(ValueError, match="unknown runtime"):
         execute(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
                 runtime="vectorized")
+
+
+# ---------------------------------------------------------------------------
+# vmapped γ-grid lane
+# ---------------------------------------------------------------------------
+#: exact-binary γ ratios so the lane's γ_g = γ_base·(γ_g/γ_base) product is
+#: bitwise the single-run lr and the remaining diff is pure FMA noise
+GRID_GAMMAS = (3e-3, 1.5e-3, 7.5e-4, 3.75e-4)
+
+
+def _grid_plan_for(spec, job, gammas=GRID_GAMMAS):
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    return compile_plan(schedule, job, rounds=spec.T, n_groups=4,
+                        seed=spec.seed, grid_gammas=gammas)
+
+
+def test_grid_plan_lowering_and_validation():
+    job = _job()
+    spec = _spec(job, T=5)
+    plan = _grid_plan_for(spec, job)
+    assert plan.n_grid == 4
+    assert plan.grid_scales.shape == (4, 5)
+    # row g is γ_g/γ_0 × the (neutral) per-round scales
+    np.testing.assert_allclose(
+        plan.grid_scales,
+        (np.asarray(GRID_GAMMAS, np.float32) / np.float32(3e-3))[:, None]
+        * np.ones((1, 5), np.float32))
+    assert plan.summary()["n_grid"] == 4
+    single = _plan_for(spec, job)
+    assert single.n_grid == 0
+    with pytest.raises(ValueError, match="γ-axis"):
+        single.grid_slice(0, 2)
+    with pytest.raises(ValueError, match="grid_scales"):
+        RunPlan(masks=plan.masks, delay_scales=plan.delay_scales,
+                data_keys=plan.data_keys, token_cdf=plan.token_cdf,
+                group_perms=plan.group_perms, global_batch=8, seq_len=16,
+                seed=0, grid_scales=plan.grid_scales[:, :3])
+
+
+def test_run_grid_matches_single_gamma_runs():
+    """The load-bearing grid-lane gate: lane i of one vmapped grid run ≡
+    a standalone scan run on a trainer built at lr=γ_i (same plan, same
+    batches), within the documented FMA tolerances."""
+    job = _job()
+    spec = _spec(job, T=6)
+    gplan = _grid_plan_for(spec, job)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)                    # lr = 3e-3 = γ_base
+    rg = run_grid(tr, gplan, tr.init_state(jax.random.PRNGKey(0)),
+                  rounds_per_launch=4)    # ragged: 4 + 2
+    assert rg.metrics["loss"].shape == (4, 6)
+    assert rg.launches == 2 and rg.host_syncs == 1
+    # γ really differed across lanes
+    assert not np.allclose(rg.metrics["loss"][0], rg.metrics["loss"][3],
+                           rtol=1e-6)
+    for i, g in enumerate(GRID_GAMMAS):
+        tri = _trainer(_job(), lr=g)
+        ri = run_scan(tri, plan, tri.init_state(jax.random.PRNGKey(0)),
+                      rounds_per_launch=4)
+        for k in METRICS:
+            np.testing.assert_allclose(
+                rg.metrics[k][i], ri.metrics[k], **TOL,
+                err_msg=f"grid lane γ={g} metric {k}")
+    # rows is a single-run view; grid curves must not silently flatten
+    with pytest.raises(ValueError, match="grid"):
+        rg.rows
+
+
+def test_run_grid_stacked_resume_and_modes():
+    """run_grid accepts an already-stacked state (resume), supports
+    metrics="none", and rejects tap / plans without a γ-axis."""
+    job = _job()
+    spec = _spec(job, T=4)
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    gplan = _grid_plan_for(spec, job)
+    # the same schedule truncated to its first 2 rounds — a run stopped
+    # at the chunk boundary (plan prefixes are exact: lower_rounds slices
+    # the same realisation, data keys are horizon-independent)
+    head_plan = compile_plan(schedule, job, rounds=2, n_groups=4, seed=0,
+                             grid_gammas=GRID_GAMMAS)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    ex = PlanExecutor(tr, gplan, donate=False)
+    full = ex.run_grid(tr.init_state(jax.random.PRNGKey(0)),
+                       rounds_per_launch=2)
+    head = PlanExecutor(tr, head_plan, donate=False).run_grid(
+        tr.init_state(jax.random.PRNGKey(0)), rounds_per_launch=2)
+    # resume: feed the stacked carry back in at the boundary
+    tail = ex.run_grid(head.state, rounds_per_launch=2, start_round=2)
+    assert tail.metrics["loss"].shape == (4, 2)
+    np.testing.assert_allclose(tail.metrics["loss"],
+                               full.metrics["loss"][:, 2:], **TOL)
+    r_none = ex.run_grid(tr.init_state(jax.random.PRNGKey(0)),
+                         rounds_per_launch=4, metrics="none")
+    assert r_none.metrics == {} and r_none.host_syncs == 0
+    with pytest.raises(ValueError, match="tap"):
+        ex.run_grid(tr.init_state(jax.random.PRNGKey(0)), metrics="tap")
+    with pytest.raises(ValueError, match="γ-axis"):
+        run_grid(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
 
 
 # ---------------------------------------------------------------------------
@@ -312,13 +493,18 @@ def test_checkpoint_resume_parity_pooled(tmp_path):
 # ---------------------------------------------------------------------------
 def test_backend_runtime_resolution():
     be = TrainerBackend()
-    assert be.resolve_runtime(_spec(_job())) == ("scan", 8)
-    assert be.resolve_runtime(_spec(_job(), runtime="eager",
-                                    rounds_per_launch=3)) == ("eager", 3)
-    assert TrainerBackend(runtime="eager", rounds_per_launch=2) \
-        .resolve_runtime(_spec(_job(), runtime="scan")) == ("eager", 2)
+    assert be.resolve_runtime(_spec(_job())) == ("scan", 8, "chunk")
+    assert be.resolve_runtime(
+        _spec(_job(), runtime="eager", rounds_per_launch=3,
+              metrics="tap")) == ("eager", 3, "tap")
+    assert TrainerBackend(runtime="eager", rounds_per_launch=2,
+                          metrics="none") \
+        .resolve_runtime(_spec(_job(), runtime="scan",
+                               metrics="tap")) == ("eager", 2, "none")
     with pytest.raises(ValueError, match="unknown runtime"):
         _spec(_job(), runtime="vectorized")
+    with pytest.raises(ValueError, match="unknown metrics"):
+        _spec(_job(), metrics="streaming")
     with pytest.raises(ValueError, match="rounds_per_launch"):
         _spec(_job(), rounds_per_launch=0)
 
@@ -333,9 +519,12 @@ def test_backend_scan_eager_parity_and_result_roundtrip():
     res_e = TrainerBackend(runtime="eager").run(spec)
     assert res_s.extra["runtime"] == "scan"
     assert res_s.extra["rounds_per_launch"] == 2
-    assert res_s.extra["launches"] == 2 and res_s.extra["host_syncs"] == 2
+    assert res_s.extra["metrics_mode"] == "chunk"
+    # no on_step → overlapped chunks, one deferred readback
+    assert res_s.extra["launches"] == 2 and res_s.extra["host_syncs"] == 1
+    assert res_s.extra["tap_events"] == 0
     assert res_e.extra["runtime"] == "eager"
-    assert res_e.extra["launches"] == 8 and res_e.extra["host_syncs"] == 4
+    assert res_e.extra["launches"] == 4 and res_e.extra["host_syncs"] == 4
     np.testing.assert_allclose(res_s.losses, res_e.losses, **TOL)
     np.testing.assert_allclose(res_s.grad_norms, res_e.grad_norms, **TOL)
     assert len(res_s.extra["metrics"]) == 4
@@ -346,6 +535,71 @@ def test_backend_scan_eager_parity_and_result_roundtrip():
     assert r2.backend == "trainer"
     assert r2.extra["runtime"] == "scan"
     assert r2.schedule["tau_max"] == res_s.schedule.tau_max()
+
+
+def test_backend_tap_and_none_modes():
+    """Spec-level metrics selection reaches the executor: tap streams
+    per-round rows to on_step (state=None), none returns no curves."""
+    job = _job()
+    seen = []
+    res_t = TrainerBackend(
+        metrics="tap",
+        on_step=lambda i, st, m: seen.append((i, st))).run(
+            _spec(job, T=4, rounds_per_launch=4))
+    assert res_t.extra["metrics_mode"] == "tap"
+    assert res_t.extra["tap_events"] == 4
+    assert res_t.extra["host_syncs"] == 0
+    assert [i for i, _ in seen] == list(range(4))
+    assert all(st is None for _, st in seen)
+    assert res_t.losses is not None and len(res_t.losses) == 4
+
+    res_n = TrainerBackend().run(_spec(job, T=4, metrics="none"))
+    assert res_n.extra["metrics_mode"] == "none"
+    assert res_n.losses is None and res_n.grad_norms is None
+    assert res_n.extra["metrics"] == []
+    assert res_n.x is not None
+
+    # a grid spec that misses the vmapped lane (single γ) still has to
+    # SCORE runs, so the sequential fallback must override metrics="none"
+    # instead of crashing on losses=None
+    res_1g = TrainerBackend().run(
+        _spec(job, T=4, stepsize=(3e-3,), metrics="none"))
+    assert res_1g.losses is not None and len(res_1g.losses) == 4
+
+
+def test_backend_grid_lane_matches_sequential_oracle():
+    """End-to-end grid policy on the scan runtime: ONE vmapped program,
+    same winner and same winning curves as the sequential eager-runtime
+    grid loop (the oracle), per-γ curves preserved in RunResult.grid."""
+    job = _job()
+    spec = _spec(job, T=6, rounds_per_launch=4, stepsize=GRID_GAMMAS)
+    res_g = TrainerBackend().run(spec)
+    res_q = TrainerBackend(runtime="eager").run(spec)
+    assert res_g.extra.get("grid_lane") and res_g.extra["n_grid"] == 4
+    assert res_g.extra["launches"] == 2       # 2 chunks, ALL γ per launch
+    assert set(res_g.grid) == set(GRID_GAMMAS)
+    assert res_g.gamma == res_q.gamma         # same selected stepsize
+    np.testing.assert_allclose(res_g.losses, res_q.losses, **TOL)
+    for g in GRID_GAMMAS:
+        assert res_g.grid[g]["losses"].shape == (6,)
+        assert np.isfinite(res_g.grid[g]["score"])
+    # an on_step consumer forces the sequential path (the lane has no
+    # per-round hook)
+    res_cb = TrainerBackend(on_step=lambda i, st, m: None).run(spec)
+    assert not res_cb.extra.get("grid_lane")
+    np.testing.assert_allclose(res_cb.losses, res_g.losses, **TOL)
+
+    # grid-lane results archive and restore: per-γ curves exact, float
+    # keys recovered, provenance fields intact
+    r2 = RunResult.from_json(res_g.to_json())
+    assert set(r2.grid) == set(GRID_GAMMAS)
+    for g in GRID_GAMMAS:
+        np.testing.assert_array_equal(r2.grid[g]["losses"],
+                                      res_g.grid[g]["losses"])
+        assert r2.grid[g]["score"] == res_g.grid[g]["score"]
+    np.testing.assert_array_equal(r2.losses, res_g.losses)
+    assert r2.extra["grid_lane"] and r2.extra["n_grid"] == 4
+    assert r2.gamma == res_g.gamma
 
 
 # ---------------------------------------------------------------------------
