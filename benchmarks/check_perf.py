@@ -11,6 +11,13 @@ exists to track.  The gate fails when any scan/grid row's normalised
 throughput (or the grid lane's ``grid_speedup``) drops more than
 ``--tolerance`` (default 30%) below the baseline's.
 
+Only the ``runtime_dispatch_ab`` bench kind has a regression gate; any
+other payload (e.g. the ``scenarios`` smoke bench, or a future kind this
+script predates) is SKIPPED loudly with exit 0 — an artifact-only bench
+must never fail CI just because the gate doesn't know how to read it.
+A missing file skips the same way (benches run under ``if: always()``,
+so an earlier failed step may legitimately leave no payload behind).
+
 Usage::
 
     python benchmarks/check_perf.py experiments/figs/BENCH_runtime.json \
@@ -20,7 +27,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+#: bench kinds this gate knows how to compare (payload "bench" field)
+KNOWN_KINDS = {"runtime_dispatch_ab"}
 
 
 def _rows(payload: dict) -> dict:
@@ -80,11 +91,27 @@ def main():
                     help="allowed fractional drop in normalised rounds/s "
                          "(default 0.3 = 30%%)")
     args = ap.parse_args()
-    with open(args.current) as f:
-        current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    failures = check(current, baseline, args.tolerance)
+    payloads = {}
+    for label, path in (("current", args.current),
+                        ("baseline", args.baseline)):
+        if not os.path.exists(path):
+            print(f"SKIP: {label} bench file {path!r} does not exist — "
+                  "nothing to gate (not a failure: benches run under "
+                  "if: always(), so an earlier failed step may have left "
+                  "no payload)")
+            return
+        with open(path) as f:
+            payloads[label] = json.load(f)
+    for label, payload in payloads.items():
+        kind = payload.get("bench", "<missing>")
+        if kind not in KNOWN_KINDS:
+            print(f"SKIP: {label} bench file {getattr(args, label)!r} has "
+                  f"kind {kind!r}, which this gate cannot compare (known: "
+                  f"{sorted(KNOWN_KINDS)}) — treating as artifact-only, "
+                  "not a failure")
+            return
+    failures = check(payloads["current"], payloads["baseline"],
+                     args.tolerance)
     if failures:
         print("\nPERF REGRESSION vs committed baseline:")
         for msg in failures:

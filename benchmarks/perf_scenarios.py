@@ -1,0 +1,148 @@
+"""Scenario-world smoke bench: non-stationary RunPlans through the scan
+executor.
+
+One row per world (stationary baseline, straggler, elastic, and a
+combined drift + data-drift + sparsify world): realise the scenario,
+lower it to a ``RunPlan`` — availability, CDF-bank and grad-density
+channels included — and time the WARM whole-run scan dispatch, recording
+the realised τ-statistics next to the throughput.  The point is a CI
+canary with two properties:
+
+* every scenario channel compiles and runs end-to-end on every push (the
+  numbers are a bonus; the row existing at all is the gate),
+* rounds/s across worlds shows what the extra channels COST at dispatch
+  level (the cdf gather and the per-leaf quantile are per-round device
+  work; elastic/straggler are free at run time — they only reshape the
+  host-side lowering).
+
+Writes ``experiments/figs/BENCH_scenarios.json`` (``bench:
+"scenarios"``).  There is no committed baseline for this payload:
+``benchmarks/check_perf.py`` only gates the ``runtime_dispatch_ab`` kind
+and loudly skips others, so this file is an artifact for eyeballs, not a
+pass/fail gate.
+
+    PYTHONPATH=src python -m benchmarks.perf_scenarios --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.api import ExperimentSpec, TrainJob, TrainerBackend
+from repro.distributed import AsyncTrainer, AsyncConfig
+from repro.optim import OptConfig
+from repro.runtime import PlanExecutor, compile_plan
+from repro.scenarios import tau_report
+
+#: world name → scenario spec string ("" = identity wrap — the baseline
+#: every other row is read against)
+WORLDS = (
+    ("stationary", ""),
+    ("straggler", "straggler:k=1,factor=8,every=16,span=4"),
+    ("elastic", "elastic:k=1,every=16,span=4"),
+    ("drift_sparsify", "drift:period=32,amp=0.5;"
+                       "data_drift:a0=1.1,a1=2.0;sparsify:frac=0.5"),
+)
+
+#: smallest step the trainer can run — the bench measures the dispatch
+#: layer + per-round channel cost, not model compute
+TINY = (("n_layers", 1), ("d_model", 8), ("n_heads", 1), ("n_kv_heads", 1),
+        ("d_ff", 16), ("vocab", 127))
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def run(out: str = "experiments/figs", quick: bool = False,
+        rounds: int = 0, arch: str = "qwen2-0.5b") -> dict:
+    os.makedirs(out, exist_ok=True)
+    rounds = rounds or (64 if quick else 256)
+    k = min(16, rounds)
+    job = TrainJob(arch=arch, global_batch=4, seq_len=4,
+                   arch_overrides=TINY)
+    mesh = _mesh()
+    tr = AsyncTrainer(job.make_arch(), mesh,
+                      opt=OptConfig(lr=3e-3, clip_norm=1.0),
+                      async_cfg=AsyncConfig(delay_rounds=1))
+    tr.n_groups = 4
+
+    entries = []
+    for name, scen in WORLDS:
+        spec = ExperimentSpec(scheduler="fedbuff:b=2",
+                              timing="poisson:slow=6", objective=job,
+                              T=rounds, n_workers=4, stepsize=3e-3, seed=0,
+                              scenario=scen)
+        world = TrainerBackend.world_for(spec, 4)
+        plan = compile_plan(world.schedule, job, rounds=rounds, n_groups=4,
+                            seed=0, availability=world.availability,
+                            zipf_as=world.zipf_as,
+                            grad_density=world.grad_density)
+        ex = PlanExecutor(tr, plan, donate=False)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        r = ex.run_scan(state, rounds_per_launch=k,
+                        metrics="none")                    # compile
+        jax.block_until_ready(jax.tree_util.tree_leaves(r.state)[0])
+        t0 = time.time()
+        r = ex.run_scan(state, rounds_per_launch=k, metrics="none")
+        jax.block_until_ready(jax.tree_util.tree_leaves(r.state)[0])
+        dt = time.time() - t0
+        rep = tau_report(world.schedule, "fedbuff", scenario_spec=scen)
+        entry = {
+            "world": name,
+            "scenario": scen,
+            "rounds": rounds,
+            "seconds": round(dt, 4),
+            "rounds_per_s": round(rounds / dt, 2),
+            "launches": r.launches,
+            "tau_max": rep["global"]["tau_max"],
+            "tau_avg": round(rep["global"]["tau_avg"], 4),
+            "tau_c": rep["global"]["tau_c"],
+            "channels": {k_: v for k_, v in plan.summary().items()
+                         if k_ in ("n_cdf_phases", "sparsified")},
+        }
+        entries.append(entry)
+        print(f"{name:<16} rounds/s={entry['rounds_per_s']:>8} "
+              f"tau_max={entry['tau_max']:>3} tau_c={entry['tau_c']:>3} "
+              f"channels={entry['channels']}")
+
+    payload = {
+        "bench": "scenarios",
+        "backend": jax.default_backend(),
+        "arch": arch,
+        "rounds": rounds,
+        "note": ("one warm whole-run scan per world on the SAME trainer; "
+                 "rows differ only in the realised world and the RunPlan "
+                 "channels it lowers to.  Absolute rounds/s is "
+                 "machine-local; read rows against the stationary row of "
+                 "the same run.  tau stats are the realised global "
+                 "statistics of each world's schedule."),
+        "entries": entries,
+    }
+    path = os.path.join(out, "BENCH_scenarios.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="64 rounds instead of 256")
+    ap.add_argument("--rounds", type=int, default=0)
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--out", default="experiments/figs")
+    args = ap.parse_args()
+    run(out=args.out, quick=args.quick, rounds=args.rounds, arch=args.arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -140,12 +140,20 @@ class TrainerBackend:
 
     # ---- pieces shared with tests -----------------------------------------
     @staticmethod
+    def world_for(spec: ExperimentSpec, n_groups: Optional[int] = None):
+        """The realised :class:`repro.scenarios.ScenarioWorld` for
+        ``spec.T`` rounds (identity wrap when the spec has no scenario —
+        bit-identical schedule to the stationary path)."""
+        sched = spec.make_scheduler(n_groups)
+        return spec.build_world(T=spec.T * sched.wait_b, n=n_groups)
+
+    @staticmethod
     def masks_for(spec: ExperimentSpec, n_groups: Optional[int] = None):
         """((rounds, n_groups) participation masks, realised Schedule) for
-        ``spec.T`` rounds."""
-        sched = spec.make_scheduler(n_groups)
-        schedule = spec.build_schedule(T=spec.T * sched.wait_b, n=n_groups)
-        return round_masks(schedule), schedule
+        ``spec.T`` rounds.  The masks are the raw schedule lowering —
+        elastic availability is folded in later, at plan compile time."""
+        world = TrainerBackend.world_for(spec, n_groups)
+        return round_masks(world.schedule), world.schedule
 
     def resolve_runtime(self, spec: ExperimentSpec):
         """(runtime, rounds_per_launch, metrics): constructor overrides
@@ -218,7 +226,9 @@ class TrainerBackend:
 
         t0 = time.time()
         tr, cfg, n_groups = self._make_trainer(spec, job, lr, adaptive)
-        masks, schedule = self.masks_for(spec, n_groups)
+        world = self.world_for(spec, n_groups)
+        schedule = world.schedule
+        masks = round_masks(schedule)
         state = tr.init_state(jax.random.PRNGKey(spec.seed))
 
         rounds = min(spec.T, masks.shape[0])
@@ -227,9 +237,14 @@ class TrainerBackend:
         # at i; AsyncTrainer's single swapped-every-round gbuf makes the
         # realised extra staleness exactly one round whenever
         # delay_rounds > 0), and the folded per-round data keys.  The
-        # executor replays plan slices with no per-round host work
+        # executor replays plan slices with no per-round host work.
+        # Scenario channels (elastic availability, drifting data law,
+        # sparsified grads) ride into the plan as extra per-round arrays
         plan = compile_plan(schedule, job, rounds=rounds, n_groups=n_groups,
-                            seed=spec.seed, adaptive=adaptive)
+                            seed=spec.seed, adaptive=adaptive,
+                            availability=world.availability,
+                            zipf_as=world.zipf_as,
+                            grad_density=world.grad_density)
         runtime, rounds_per_launch, metrics = self.resolve_runtime(spec)
         if metrics == "none" and metrics_floor is not None:
             metrics = metrics_floor
@@ -251,6 +266,8 @@ class TrainerBackend:
                    "arch": cfg.name, "n_groups": n_groups,
                    "update_impl": tr.update_impl,
                    "delay_scales": plan.delay_scales if adaptive else None,
+                   "scenario": spec.scenario,
+                   "plan_summary": plan.summary(),
                    "runtime": runtime,
                    "rounds_per_launch": rounds_per_launch,
                    "metrics_mode": metrics if runtime == "scan" else "chunk",
@@ -271,10 +288,15 @@ class TrainerBackend:
         gammas = policy.gammas
         tr, cfg, n_groups = self._make_trainer(spec, job, gammas[0],
                                                adaptive=False)
-        masks, schedule = self.masks_for(spec, n_groups)
+        world = self.world_for(spec, n_groups)
+        schedule = world.schedule
+        masks = round_masks(schedule)
         rounds = min(spec.T, masks.shape[0])
         plan = compile_plan(schedule, job, rounds=rounds, n_groups=n_groups,
-                            seed=spec.seed, grid_gammas=gammas)
+                            seed=spec.seed, grid_gammas=gammas,
+                            availability=world.availability,
+                            zipf_as=world.zipf_as,
+                            grad_density=world.grad_density)
         _, rounds_per_launch, _ = self.resolve_runtime(spec)
         ex = PlanExecutor(tr, plan)
         # scoring needs curves, so the grid lane always reads them back
@@ -305,6 +327,8 @@ class TrainerBackend:
                    "arch": cfg.name, "n_groups": n_groups,
                    "update_impl": tr.update_impl,
                    "delay_scales": None,
+                   "scenario": spec.scenario,
+                   "plan_summary": plan.summary(),
                    "runtime": "scan", "grid_lane": True,
                    "n_grid": len(gammas),
                    "rounds_per_launch": rounds_per_launch,

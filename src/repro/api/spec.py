@@ -197,6 +197,16 @@ class ExperimentSpec:
       ``"none"`` (discarded on device — fastest, no curves).  ``None``
       defers to the backend default; ignored by the eager runtime and the
       other tiers.
+    * ``scenario`` — optional non-stationary world spec
+      (:mod:`repro.scenarios` grammar, e.g.
+      ``"straggler:k=2,factor=8;elastic:every=32"``): the scheduler and
+      timing model are wrapped in the scenario's transforms before the
+      schedule is realised.  Schedule-level transforms (drift, straggler,
+      elastic) affect every backend that realises a schedule; the data
+      (``data_drift``) and update (``sparsify``) channels lower into the
+      trainer backend's ``RunPlan`` only.  ``None`` (the default) takes
+      the plain stationary path; ``""`` is the identity scenario
+      (wrapped path, bit-identical schedule — the parity gate).
     """
 
     RUNTIMES = (None, "scan", "eager")
@@ -216,6 +226,7 @@ class ExperimentSpec:
     runtime: Optional[str] = None       # None → backend default ("scan")
     rounds_per_launch: int = 8          # scan runtime: K rounds per launch
     metrics: Optional[str] = None       # None → backend default ("chunk")
+    scenario: Optional[str] = None      # None → stationary world
 
     def __post_init__(self):
         object.__setattr__(self, "stepsize",
@@ -237,6 +248,9 @@ class ExperimentSpec:
         if name not in REGISTRY:
             raise ValueError(
                 f"unknown scheduler {name!r}; want one of {sorted(REGISTRY)}")
+        if self.scenario is not None:
+            from ..scenarios import parse_scenario
+            parse_scenario(self.scenario)   # fail fast on grammar errors
 
     # ---- resolved pieces ---------------------------------------------------
     @property
@@ -269,8 +283,31 @@ class ExperimentSpec:
             speeds = heterogeneous_speeds(n, slow_factor=slow, base=base)
         return TimingModel(speeds, pattern, seed=self.seed)
 
+    def make_scenario(self):
+        """The parsed :class:`repro.scenarios.Scenario` (empty when the
+        spec has none — the identity scenario)."""
+        from ..scenarios import parse_scenario
+        return parse_scenario(self.scenario or "")
+
+    def build_world(self, T: Optional[int] = None,
+                    n: Optional[int] = None):
+        """Realise the (possibly non-stationary) world for this spec:
+        the scenario-wrapped schedule plus the per-round channels
+        (availability / zipf trajectory / grad density) the trainer
+        backend folds into the :class:`repro.runtime.RunPlan`.  With no
+        scenario this is the identity wrap — same schedule bit-for-bit as
+        :meth:`build_schedule`."""
+        from ..scenarios import realise_world
+        sched = self.make_scheduler(n)
+        return realise_world(self.make_scenario(), sched,
+                             self.make_timing(n), T or self.T,
+                             seed=self.seed)
+
     def build_schedule(self, T: Optional[int] = None,
                        n: Optional[int] = None) -> Schedule:
-        """Realise the ordering (i_t, π_t) for this spec."""
+        """Realise the ordering (i_t, π_t) for this spec (through the
+        scenario wrap when one is set)."""
+        if self.scenario is not None:
+            return self.build_world(T, n).schedule
         sched = self.make_scheduler(n)
         return build_schedule(sched, self.make_timing(n), T or self.T)

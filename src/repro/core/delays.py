@@ -5,11 +5,17 @@ turns it into a per-job compute time ``r`` (in simulated seconds):
 
 * ``fixed``:    r = s_i                       (fixed delay pattern)
 * ``poisson``:  r ~ Po(s_i)                   (clamped to >= 1)
-* ``normal``:   r = |N(s_i, s_i)| + 1
+* ``normal``:   r = |N(mean s_i, variance s_i)| + 1
+                (i.e. std = sqrt(s_i); mean and variance both equal s_i,
+                matching the Poisson pattern's first two moments)
 * ``uniform``:  r ~ Uni(0, s_i)
 
 These are exactly the four patterns the paper benchmarks.  The simulator is
-agnostic: anything with ``sample(worker) -> float`` works.
+agnostic: anything with ``sample(worker) -> float`` works.  Non-stationary
+worlds (drifting speeds, stragglers, elastic pools) wrap these stationary
+models — see :mod:`repro.scenarios`; the wrappers reuse :meth:`_draw` on a
+modulated speed so an identity wrap consumes the RNG stream bit-for-bit
+identically.
 """
 from __future__ import annotations
 
@@ -46,19 +52,57 @@ class TimingModel:
     def n_workers(self) -> int:
         return int(self.speeds.shape[0])
 
-    def sample(self, worker: int) -> float:
-        s = float(self.speeds[worker])
+    # ------------------------------------------------------------------ draws
+    def _draw(self, s: float) -> float:
+        """One compute-time draw at speed parameter ``s`` — the single
+        place distribution semantics live (scalar oracle; wrappers feed a
+        modulated ``s`` through the same RNG stream)."""
         if self.pattern == "fixed":
             r = s
         elif self.pattern == "poisson":
             r = float(self._rng.poisson(s))
             r = max(r, 1.0)
         elif self.pattern == "normal":
+            # mean s, variance s (std = sqrt(s)) — see module docstring
             r = abs(float(self._rng.normal(s, np.sqrt(s)))) + 1.0
         else:  # uniform
             r = float(self._rng.uniform(0.0, s))
             r = max(r, 1e-6)
         return r
+
+    def _draw_batch(self, s: np.ndarray) -> np.ndarray:
+        """Vectorised :meth:`_draw`: one RNG call for the whole batch.
+
+        numpy ``Generator`` fills array requests element-by-element from
+        the same bit stream as repeated scalar calls, so the batched draws
+        are bit-identical to a ``[_draw(x) for x in s]`` loop — the scalar
+        path stays the test oracle (tests/test_scenarios.py pins this)."""
+        s = np.asarray(s, dtype=np.float64)
+        if self.pattern == "fixed":
+            return s.copy()
+        if self.pattern == "poisson":
+            return np.maximum(self._rng.poisson(s).astype(np.float64), 1.0)
+        if self.pattern == "normal":
+            return np.abs(self._rng.normal(s, np.sqrt(s))) + 1.0
+        return np.maximum(self._rng.uniform(0.0, s), 1e-6)  # uniform
+
+    # ------------------------------------------------------------- public API
+    def sample(self, worker: int) -> float:
+        return self._draw(float(self.speeds[worker]))
+
+    def sample_round(self, workers) -> np.ndarray:
+        """Batched per-job compute times for a round's worth of job starts.
+
+        ``workers`` is a sequence of worker indices (duplicates allowed —
+        a waiting round can start several jobs on distinct workers, and
+        the engine batches all simultaneous starts into ONE RNG call).
+        Returns ``(len(workers),)`` float64 draws, bit-identical to
+        calling :meth:`sample` once per worker in order.
+        """
+        workers = np.asarray(workers, dtype=np.intp)
+        if workers.size == 0:
+            return np.zeros(0, dtype=np.float64)
+        return self._draw_batch(self.speeds[workers])
 
 
 def heterogeneous_speeds(n: int, slow_factor: float = 5.0, base: float = 1.0):

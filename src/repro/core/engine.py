@@ -104,25 +104,46 @@ def build_schedule(scheduler: Scheduler, timing: TimingModel, T: int) -> Schedul
     job_counter = 0
     now = 0.0
 
-    def assign(w: int, alpha: int, at: float) -> None:
-        nonlocal job_counter
-        job = Job(worker=w, assign_iter=alpha, assign_time=at, job_id=job_counter)
-        job_counter += 1
-        queues[w].append(job)
-        maybe_start(w)
+    def _start(w: int, job: Job, start: float, duration: float) -> None:
+        finish = start + duration
+        jobs[job.job_id] = dataclasses.replace(job, finish_time=finish)
+        heapq.heappush(heap, (finish, job.job_id, w))
 
     def maybe_start(w: int) -> None:
-        """If the worker is idle and has a queued job, start it."""
+        """If the worker is idle and has a queued job, start it (scalar
+        path — completion-triggered starts are one at a time)."""
         if queues[w] and free_at[w] >= 0:
             job = queues[w].pop(0)
             start = max(free_at[w], job.assign_time)
-            finish = start + timing.sample(w)
             free_at[w] = -1.0  # busy marker; real free time set on completion
-            jobs[job.job_id] = dataclasses.replace(job, finish_time=finish)
-            heapq.heappush(heap, (finish, job.job_id, w))
+            _start(w, job, start, timing.sample(w))
 
-    for w in scheduler.initial_workers():
-        assign(w, 0, 0.0)
+    def assign_batch(ws, alpha: int, at: float) -> None:
+        """Assign jobs to ``ws`` in order; all jobs that start NOW get
+        their compute times from ONE batched ``sample_round`` call.
+
+        Job ids increment in assignment order and the batched draws are
+        bit-identical to sequential scalar draws (delays.TimingModel), so
+        the realised schedule — heap tie-breaks included — matches the
+        old one-``assign``-at-a-time loop exactly.
+        """
+        nonlocal job_counter
+        starts: list[tuple[int, Job, float]] = []
+        for w in ws:
+            job = Job(worker=w, assign_iter=alpha, assign_time=at,
+                      job_id=job_counter)
+            job_counter += 1
+            queues[w].append(job)
+            if free_at[w] >= 0:                 # idle → starts immediately
+                j = queues[w].pop(0)
+                start = max(free_at[w], j.assign_time)
+                free_at[w] = -1.0
+                starts.append((w, j, start))
+        durations = timing.sample_round([w for w, _, _ in starts])
+        for (w, j, start), d in zip(starts, durations):
+            _start(w, j, start, float(d))
+
+    assign_batch(scheduler.initial_workers(), 0, 0.0)
 
     workers = np.empty(T, dtype=np.int32)
     assign_iters = np.empty(T, dtype=np.int32)
@@ -150,8 +171,7 @@ def build_schedule(scheduler: Scheduler, timing: TimingModel, T: int) -> Schedul
         round_finished.append(w)
         t += 1
         if t % b == 0:
-            for k in scheduler.next_workers(round_finished):
-                assign(k, t, now)
+            assign_batch(scheduler.next_workers(round_finished), t, now)
             round_finished = []
 
     unfinished = [j.assign_iter for j in jobs.values()]

@@ -1,3 +1,5 @@
-from .pipeline import DataConfig, HeterogeneousTokenPipeline, EpochShuffler
+from .pipeline import (DataConfig, HeterogeneousTokenPipeline, EpochShuffler,
+                       zipf_pmf)
 
-__all__ = ["DataConfig", "HeterogeneousTokenPipeline", "EpochShuffler"]
+__all__ = ["DataConfig", "HeterogeneousTokenPipeline", "EpochShuffler",
+           "zipf_pmf"]

@@ -17,6 +17,19 @@ import dataclasses
 import numpy as np
 
 
+def zipf_pmf(vocab: int, a: float) -> np.ndarray:
+    """Normalised Zipf pmf over ranks 1..vocab with exponent ``a``.
+
+    The single source of the token marginal law: the host pipeline, the
+    compiled plan's static inverse-CDF table, AND the scenario layer's
+    drifting-exponent CDF bank all build from this, so a drifting world
+    whose trajectory passes through ``a`` samples the exact distribution
+    the stationary world at ``a`` uses."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    pmf = ranks ** (-float(a))
+    return pmf / pmf.sum()
+
+
 @dataclasses.dataclass
 class DataConfig:
     vocab: int
@@ -43,10 +56,7 @@ class HeterogeneousTokenPipeline:
                 idx = rng.choice(cfg.vocab, size=min(swap, cfg.vocab), replace=False)
                 p[idx] = rng.permutation(p[idx])
             self.perms.append(p)
-        # zipf pmf over ranks
-        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
-        pmf = ranks ** (-cfg.zipf_a)
-        self.pmf = pmf / pmf.sum()
+        self.pmf = zipf_pmf(cfg.vocab, cfg.zipf_a)
 
     def batch(self, step: int) -> dict:
         cfg = self.cfg

@@ -218,11 +218,18 @@ class AsyncTrainer:
     def train_step_fn(self):
         """The pjit train step.
 
-        ``step(state, batch, mask, delay_scale=None)``: ``delay_scale`` is
-        the optional per-round stepsize scale (γ_q = γ·delay_scale_q) fed
-        from the realised schedule's delay metadata
-        (:func:`repro.core.round_delay_scales`); omitted, the static
-        ``delay_adaptive`` 1/(1+delay_rounds) rule applies.  With
+        ``step(state, batch, mask, delay_scale=None, grad_density=None)``:
+        ``delay_scale`` is the optional per-round stepsize scale
+        (γ_q = γ·delay_scale_q) fed from the realised schedule's delay
+        metadata (:func:`repro.core.round_delay_scales`); omitted, the
+        static ``delay_adaptive`` 1/(1+delay_rounds) rule applies.
+        ``grad_density`` is the optional per-round keep-density in (0, 1]
+        (the ``repro.scenarios`` sparsified-gradients staleness remedy):
+        each gradient leaf keeps only its largest-magnitude ``density``
+        fraction (per-leaf quantile threshold — the density is traced, so
+        k is dynamic and ``top_k`` is unavailable); 1.0 is an exact no-op.
+        Sparsification happens BEFORE the ZeRO reshard / pooling, i.e. on
+        the gradient the server update consumes.  With
         ``delay_rounds > 0`` the whole server update (eq. 2) — consume the
         stale ``gbuf``, step params/moments, buffer the fresh grads — is one
         :func:`repro.optim.make_delayed_apply` call, which the pallas
@@ -241,7 +248,7 @@ class AsyncTrainer:
             pool_sh = NamedSharding(self.mesh,
                                     pooled_pspec(self.mesh, self.rules))
 
-        def step(state, batch, mask, delay_scale=None):
+        def step(state, batch, mask, delay_scale=None, grad_density=None):
             if self.pooled:
                 params = unpool_tree(
                     self.pool_layout,
@@ -288,6 +295,22 @@ class AsyncTrainer:
             else:
                 (loss, parts), grads = jax.value_and_grad(
                     lfn, has_aux=True)(params, batch, w)
+            if grad_density is not None:
+                # magnitude top-k per leaf at traced density: threshold at
+                # the (1 − density)-quantile of |g| and zero everything
+                # below it.  density = 1 ⇒ threshold = min|g| ⇒ keep-all
+                # (g·1.0 is bitwise identity), so a neutral channel row
+                # changes nothing.
+                dens = jnp.clip(jnp.asarray(grad_density, jnp.float32),
+                                0.0, 1.0)
+
+                def sparsify(g):
+                    a = jnp.abs(g.astype(jnp.float32)).reshape(-1)
+                    thr = jnp.quantile(a, 1.0 - dens)
+                    keep = jnp.abs(g.astype(jnp.float32)) >= thr
+                    return g * keep.astype(g.dtype)
+
+                grads = jax.tree_util.tree_map(sparsify, grads)
             # ZeRO: reshard grads to the optimizer-state sharding before the
             # update (reduce-scatter) — clip/Adam f32 temps shrink by the
             # data-axis factor, which is what makes 314B fit.  The pooled
@@ -353,22 +376,39 @@ class AsyncTrainer:
         return sharded_trace(step, self.mesh, self.rules)
 
     def jit_train_step(self, batch_shape, donate: bool = True,
-                       with_delay_scale: bool = False):
+                       with_delay_scale: bool = False,
+                       with_grad_density: bool = False):
         """pjit-compiled train step for a (batch, seq) shape.
 
-        ``with_delay_scale=True`` compiles the 4-arg signature
-        ``step(state, batch, mask, delay_scale)`` (the per-round stepsize
-        scale as a replicated traced scalar) — without it the step must be
-        called with exactly (state, batch, mask)."""
+        The compiled signature is exactly positional:
+
+        * base — ``step(state, batch, mask)``,
+        * ``with_delay_scale`` — ``+ delay_scale`` (per-round stepsize
+          scale, replicated traced scalar),
+        * ``with_grad_density`` — ``+ grad_density`` (per-round gradient
+          keep-density; composes with ``with_delay_scale``, and without it
+          the 4th positional argument IS the density — a wrapper pins the
+          underlying step's ``delay_scale`` slot to None so the trainer's
+          static stepsize rule stays in charge)."""
         bspecs = M.batch_specs(self.cfg, *batch_shape)
         batch_sh = tree_shardings(bspecs, self.mesh, self.rules)
         state_sh = self.state_shardings()
-        mask_sh = NamedSharding(self.mesh, P())
-        in_sh = (state_sh, batch_sh, mask_sh)
-        if with_delay_scale:
-            in_sh = in_sh + (NamedSharding(self.mesh, P()),)
+        repl = NamedSharding(self.mesh, P())
+        step = self.train_step_fn()
+        in_sh = (state_sh, batch_sh, repl)
+        if with_delay_scale and with_grad_density:
+            fn_, extra = step, 2
+        elif with_grad_density:
+            def fn_(state, batch, mask, grad_density):
+                return step(state, batch, mask, None, grad_density)
+            extra = 1
+        elif with_delay_scale:
+            fn_, extra = step, 1
+        else:
+            fn_, extra = step, 0
+        in_sh = in_sh + (repl,) * extra
         fn = jax.jit(
-            self.train_step_fn(),
+            fn_,
             in_shardings=in_sh,
             out_shardings=(state_sh, None),
             donate_argnums=(0,) if donate else (),

@@ -63,6 +63,16 @@ def main():
                          "--rounds-per-launch, but no state for "
                          "checkpoints); 'none' discards metrics on device "
                          "(fastest, final state only)")
+    ap.add_argument("--scenario", default=None,
+                    help="non-stationary world spec (repro.scenarios "
+                         "grammar), e.g. 'straggler:k=2,factor=8;"
+                         "elastic:every=32,span=8' or "
+                         "'data_drift:a0=1.2,a1=2.0;sparsify:frac=0.5'; "
+                         "omit for the stationary world")
+    ap.add_argument("--tau-report", action="store_true",
+                    help="print the windowed tau-statistics report "
+                         "(realised tau_max/tau_avg/tau_C per window vs "
+                         "the core.theory Table-1 rate) after the run")
     ap.add_argument("--sync", action="store_true")
     ap.add_argument("--host-mesh", action="store_true",
                     help="use this host's devices instead of the 16x16 pod")
@@ -102,7 +112,8 @@ def main():
         scheduler=scheduler, timing=f"{args.pattern}:slow=6",
         objective=job, T=args.steps, n_workers=args.n_groups or None,
         stepsize=stepsize, seed=args.seed, runtime=args.runtime,
-        rounds_per_launch=args.rounds_per_launch, metrics=args.metrics)
+        rounds_per_launch=args.rounds_per_launch, metrics=args.metrics,
+        scenario=args.scenario)
 
     print(f"arch={cfg.name} params={n_params(cfg)/1e6:.1f}M "
           f"mesh={dict(mesh.shape)} groups={args.n_groups or 'auto'} "
@@ -110,7 +121,8 @@ def main():
           f"delay={0 if args.sync else args.delay_rounds} "
           f"update_impl={args.update_impl} runtime={args.runtime}"
           + (f" K={args.rounds_per_launch} metrics={args.metrics}"
-             if args.runtime == "scan" else ""))
+             if args.runtime == "scan" else "")
+          + (f" scenario={args.scenario!r}" if args.scenario else ""))
 
     if (args.runtime == "scan" and args.ckpt and args.ckpt_every
             and args.ckpt_every % args.rounds_per_launch):
@@ -149,6 +161,13 @@ def main():
           f"launches={res.extra['launches']} "
           f"host_syncs={res.extra['host_syncs']} "
           f"tap_events={res.extra['tap_events']}")
+    if args.tau_report:
+        from ..scenarios import render_report, tau_report
+        print(render_report(tau_report(
+            res.schedule, args.scheduler,
+            concurrency=spec.make_scheduler(
+                res.extra["n_groups"]).concurrency(),
+            scenario_spec=args.scenario or "")))
     if args.ckpt:
         checkpoint.save(args.ckpt, res.x, step=args.steps,
                         meta={"arch": cfg.name})

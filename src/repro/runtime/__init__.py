@@ -22,13 +22,14 @@ usable directly against any ``AsyncTrainer``::
     res = execute(trainer, plan, trainer.init_state(key),
                   runtime="scan", rounds_per_launch=16)
 """
-from .plan import RunPlan, compile_plan, fold_data_keys
+from .plan import (RunPlan, compile_plan, fold_data_keys,
+                   quantize_zipf_trajectory)
 from .executor import (METRICS, METRIC_MODES, RUNTIMES, ExecResult,
                        ExecStats, PlanExecutor, execute, make_batch_fn,
                        run_eager, run_grid, run_scan)
 
 __all__ = [
-    "RunPlan", "compile_plan", "fold_data_keys",
+    "RunPlan", "compile_plan", "fold_data_keys", "quantize_zipf_trajectory",
     "METRICS", "METRIC_MODES", "RUNTIMES", "ExecResult", "ExecStats",
     "PlanExecutor", "execute", "make_batch_fn", "run_eager", "run_grid",
     "run_scan",

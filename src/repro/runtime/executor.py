@@ -124,7 +124,7 @@ class ExecResult:
 
 
 def make_batch_fn(plan: RunPlan, cfg) -> Callable:
-    """``batch_of(key) -> batch dict``, entirely on device.
+    """``batch_of(key, cdf_i=None) -> batch dict``, entirely on device.
 
     Tokens: inverse-CDF Zipf draws (``searchsorted`` on the plan's
     cumulative pmf) pushed through each group's vocab permutation — the
@@ -133,6 +133,11 @@ def make_batch_fn(plan: RunPlan, cfg) -> Callable:
     round key.  Non-token modalities (vision patches / audio frames) are
     the same stubbed normal draws the host path used, keyed per-modality
     via ``fold_in``.
+
+    ``cdf_i`` is the data-drift phase index (``plan.cdf_index[q]``): on a
+    drifting plan round q samples from ``cdf_bank[cdf_i]`` — one extra
+    device gather — instead of the static ``token_cdf``.  Static plans
+    ignore it, so stationary call sites stay one-argument.
     """
     import jax
     import jax.numpy as jnp
@@ -140,18 +145,20 @@ def make_batch_fn(plan: RunPlan, cfg) -> Callable:
 
     specs = batch_specs(cfg, plan.global_batch, plan.seq_len)
     cdf = jnp.asarray(plan.token_cdf)
+    bank = None if plan.cdf_bank is None else jnp.asarray(plan.cdf_bank)
     perms = jnp.asarray(plan.group_perms)
     per = plan.global_batch // plan.n_groups
     gidx = jnp.repeat(jnp.arange(plan.n_groups), per)
 
-    def batch_of(key):
+    def batch_of(key, cdf_i=None):
+        cdf_q = cdf if bank is None or cdf_i is None else bank[cdf_i]
         out = {}
         for j, (k, sp) in enumerate(sorted(specs.items())):
             kj = jax.random.fold_in(key, j)
             if sp.dtype == "int32":          # tokens (possibly shortened)
                 u = jax.random.uniform(kj, (plan.global_batch, sp.shape[1]))
-                ranks = jnp.clip(jnp.searchsorted(cdf, u), 0,
-                                 cdf.shape[0] - 1).astype(jnp.int32)
+                ranks = jnp.clip(jnp.searchsorted(cdf_q, u), 0,
+                                 cdf_q.shape[0] - 1).astype(jnp.int32)
                 out[k] = perms[gidx[:, None], ranks]
             else:                            # stubbed modality embeddings
                 out[k] = jax.random.normal(kj, sp.shape, jnp.float32)
@@ -216,21 +223,33 @@ class PlanExecutor:
         γ-scale; for a neutral plan the step is called 3-arg so the
         trainer's own static ``AsyncConfig.delay_adaptive`` rule stays in
         charge (an explicit all-ones scale would silently override it).
-        The γ-grid lane forces the 4-arg step — its scale rows ARE the
-        whole stepsize policy per grid point.
+        The γ-grid lane forces the explicit-scale step — its scale rows
+        ARE the whole stepsize policy per grid point.  A sparsified plan
+        (``grad_density`` channel) also forces it: the density is the
+        step's 5th positional argument, so the scale slot must be filled
+        (scan and eager agree, so parity is unaffected).
+
+        Scenario channels ride the same xs dict: ``xs["cdf"]`` (data-drift
+        phase index) feeds the batch synthesiser, ``xs["dens"]``
+        (keep-density) feeds the step's sparsifier.
         """
         import jax
 
         step, batch_of, repl = self._step, self._batch_of, self._repl
-        with_scale = self.plan.adaptive or force_scale
+        with_density = self.plan.grad_density is not None
+        with_scale = self.plan.adaptive or force_scale or with_density
 
         def body(st, xs):
-            _, mask, key, scale = xs
             batch = jax.tree_util.tree_map(
                 lambda x: jax.lax.with_sharding_constraint(x, repl),
-                batch_of(key))
-            st, m = step(st, batch, mask, scale) if with_scale \
-                else step(st, batch, mask)
+                batch_of(xs["key"], xs.get("cdf")))
+            if with_density:
+                st, m = step(st, batch, xs["mask"], xs["scale"],
+                             xs["dens"])
+            elif with_scale:
+                st, m = step(st, batch, xs["mask"], xs["scale"])
+            else:
+                st, m = step(st, batch, xs["mask"])
             return st, m
 
         return body
@@ -244,8 +263,9 @@ class PlanExecutor:
             sink(int(idx), np.asarray(row))
 
     def _chunk_jit(self, mode: str):
-        """Jitted ``chunk(state, idx, masks, keys, scales)`` for one metric
-        mode; ``"chunk"`` additionally returns the stacked metric rows."""
+        """Jitted ``chunk(state, xs)`` for one metric mode, where ``xs``
+        is the per-round slice dict from :meth:`_slices`; ``"chunk"``
+        additionally returns the stacked metric rows."""
         if mode in self._chunk_jits:
             return self._chunk_jits[mode]
         import jax
@@ -261,32 +281,31 @@ class PlanExecutor:
             if mode == "tap":
                 # ordered: rows must reach the host in round order (the
                 # sink builds the curve and fires on_step sequentially)
-                io_callback(emit, None, xs[0], _metrics_row(m),
+                io_callback(emit, None, xs["idx"], _metrics_row(m),
                             ordered=True)
             return st, None
 
-        def chunk(state, idx, masks, keys, scales):
-            state, ys = jax.lax.scan(round_fn, state,
-                                     (idx, masks, keys, scales))
+        def chunk(state, xs):
+            state, ys = jax.lax.scan(round_fn, state, xs)
             return (state, ys) if mode == "chunk" else state
 
         state_sh = self.trainer.state_shardings()
-        repl = self._repl
+        # self._repl is a pytree PREFIX: every plan slice in xs replicated
         fn = jax.jit(
             chunk,
-            in_shardings=(state_sh, repl, repl, repl, repl),
+            in_shardings=(state_sh, self._repl),
             out_shardings=(state_sh, None) if mode == "chunk" else state_sh,
             donate_argnums=(0,) if self.donate else ())
         self._chunk_jits[mode] = fn
         return fn
 
     def _grid_jit(self, n_grid: int, mode: str):
-        """Jitted ``chunk(states, idx, masks, keys, grid_scales)`` vmapped
-        over the γ-axis: states carry a leading ``(n_grid,)`` axis,
-        ``grid_scales`` is ``(n_grid, K)``, and masks/keys/batches are
-        shared across grid points (the ordering and the data stream do not
-        depend on γ — the same observation behind the simulator tier's
-        batched ``replay_grid``)."""
+        """Jitted ``chunk(states, shared, grid_scales)`` vmapped over the
+        γ-axis: states carry a leading ``(n_grid,)`` axis, ``grid_scales``
+        is ``(n_grid, K)``, and the shared xs dict (masks, keys, scenario
+        channels, batches) is broadcast across grid points (the ordering
+        and the data stream do not depend on γ — the same observation
+        behind the simulator tier's batched ``replay_grid``)."""
         key = (n_grid, mode)
         if key in self._grid_jits:
             return self._grid_jits[key]
@@ -294,28 +313,35 @@ class PlanExecutor:
 
         body = self._scan_body(force_scale=True)
 
-        def one_gamma(st, scales, idx, masks, keys):
+        def one_gamma(st, scales, shared):
             def round_fn(s, xs):
                 s, m = body(s, xs)
                 return s, (_metrics_row(m) if mode == "chunk" else None)
 
-            return jax.lax.scan(round_fn, st, (idx, masks, keys, scales))
+            return jax.lax.scan(round_fn, st, dict(shared, scale=scales))
 
-        def chunk(states, idx, masks, keys, grid_scales):
-            states, ys = jax.vmap(
-                one_gamma, in_axes=(0, 0, None, None, None))(
-                    states, grid_scales, idx, masks, keys)
+        def chunk(states, shared, grid_scales):
+            states, ys = jax.vmap(one_gamma, in_axes=(0, 0, None))(
+                states, grid_scales, shared)
             return (states, ys) if mode == "chunk" else states
 
         fn = jax.jit(chunk, donate_argnums=(0,) if self.donate else ())
         self._grid_jits[key] = fn
         return fn
 
-    def _slices(self, lo: int, hi: int):
+    def _slices(self, lo: int, hi: int) -> dict:
+        """Per-round xs dict for rounds ``[lo, hi)``: always idx / mask /
+        key / scale, plus the plan's scenario channels when present."""
         import jax.numpy as jnp
 
-        idx = jnp.arange(lo, hi, dtype=jnp.int32)
-        return (idx,) + self.plan.device_slices(lo, hi)
+        masks, keys, scales = self.plan.device_slices(lo, hi)
+        xs = {"idx": jnp.arange(lo, hi, dtype=jnp.int32),
+              "mask": masks, "key": keys, "scale": scales}
+        if self.plan.cdf_index is not None:
+            xs["cdf"] = jnp.asarray(self.plan.cdf_index[lo:hi])
+        if self.plan.grad_density is not None:
+            xs["dens"] = jnp.asarray(self.plan.grad_density[lo:hi])
+        return xs
 
     # ------------------------------------------------------------------ scan
     def run_scan(self, state, *, rounds_per_launch: int = 8,
@@ -375,7 +401,7 @@ class PlanExecutor:
             self._tap_sink = sink
             try:
                 for lo, hi in bounds:
-                    state = fn(state, *self._slices(lo, hi))
+                    state = fn(state, self._slices(lo, hi))
                     stats.launches += 1
                 # completion barrier (not a metric transfer): flushes the
                 # enqueued chunks, then drains the callback queue — array
@@ -401,7 +427,7 @@ class PlanExecutor:
 
         if metrics == "none":
             for lo, hi in bounds:
-                state = fn(state, *self._slices(lo, hi))
+                state = fn(state, self._slices(lo, hi))
                 stats.launches += 1
             state = jax.block_until_ready(state)
             return ExecResult(state=state, metrics={}, stats=stats)
@@ -409,7 +435,7 @@ class PlanExecutor:
         # metrics == "chunk"
         rows = []
         for lo, hi in bounds:
-            state, ms = fn(state, *self._slices(lo, hi))
+            state, ms = fn(state, self._slices(lo, hi))
             stats.launches += 1
             if on_step is not None:
                 ms = np.asarray(ms)          # blocking readback per chunk
@@ -487,9 +513,10 @@ class PlanExecutor:
         rows = []
         for lo, hi in _chunk_bounds(plan.rounds, rounds_per_launch,
                                     start_round):
-            idx, masks, keys, _ = self._slices(lo, hi)
+            shared = self._slices(lo, hi)
+            del shared["scale"]          # per-γ rows replace the base scale
             scales = plan.grid_slice(lo, hi)
-            out = fn(states, idx, masks, keys, scales)
+            out = fn(states, shared, scales)
             states, ms = out if metrics == "chunk" else (out, None)
             stats.launches += 1
             if ms is not None:
@@ -517,21 +544,28 @@ class PlanExecutor:
         import jax.numpy as jnp
 
         plan = self.plan
+        with_density = plan.grad_density is not None
+        with_scale = plan.adaptive or with_density
         if self._eager is None:
             self._eager = (
                 jax.jit(self._batch_of),
                 self.trainer.jit_train_step(
                     (plan.global_batch, plan.seq_len),
                     donate=self.donate,
-                    with_delay_scale=plan.adaptive))
+                    with_delay_scale=with_scale,
+                    with_grad_density=with_density))
         batch_of, step = self._eager
         rows = []
         stats = ExecStats()
         for i in range(start_round, plan.rounds):
             key = jnp.asarray(plan.data_keys[i])
-            args = (state, batch_of(key), jnp.asarray(plan.masks[i]))
-            if plan.adaptive:       # neutral plans: the trainer's own
+            batch = batch_of(key, jnp.int32(plan.cdf_index[i])) \
+                if plan.cdf_index is not None else batch_of(key)
+            args = (state, batch, jnp.asarray(plan.masks[i]))
+            if with_scale:          # neutral plans: the trainer's own
                 args += (jnp.float32(plan.delay_scales[i]),)  # static rule
+            if with_density:
+                args += (jnp.float32(plan.grad_density[i]),)
             state, m = step(*args)
             stats.launches += 1
             row = {k: float(m[k]) for k in METRICS}  # host sync per round

@@ -57,6 +57,20 @@ class RunPlan:
     :meth:`~repro.runtime.PlanExecutor.run_grid` lane scans over.  The
     ordering, masks and data keys are γ-independent, so one plan serves
     the whole grid.
+
+    Scenario channels (``repro.scenarios`` worlds; all optional, all
+    ``None`` for a stationary plan):
+
+    * elastic membership has NO channel of its own — the availability
+      table is folded into ``masks`` at compile time (a down worker's mask
+      entry is zeroed, hard-dropping its residual in-flight receipts),
+    * ``cdf_bank``/``cdf_index`` — drifting data law: ``(n_phases,
+      vocab)`` f32 cumulative Zipf pmfs and the ``(rounds,)`` int32 row
+      index per round (the trajectory quantised to ≤ ``n_phases``
+      levels); round q samples tokens from ``cdf_bank[cdf_index[q]]``,
+    * ``grad_density`` — ``(rounds,)`` f32 keep-densities in (0, 1]:
+      per-leaf magnitude top-k gradient sparsification applied inside the
+      train step (1.0 ⇒ exact no-op).
     """
 
     masks: np.ndarray
@@ -69,6 +83,9 @@ class RunPlan:
     seed: int
     adaptive: bool = False
     grid_scales: Optional[np.ndarray] = None
+    cdf_bank: Optional[np.ndarray] = None
+    cdf_index: Optional[np.ndarray] = None
+    grad_density: Optional[np.ndarray] = None
 
     @property
     def rounds(self) -> int:
@@ -111,6 +128,29 @@ class RunPlan:
                 f"grid_scales must be (n_grid >= 1, rounds="
                 f"{self.masks.shape[0]}); got "
                 f"{self.grid_scales.shape}")
+        if (self.cdf_bank is None) != (self.cdf_index is None):
+            raise ValueError("cdf_bank and cdf_index must be set together")
+        if self.cdf_bank is not None:
+            if self.cdf_bank.ndim != 2 or \
+                    self.cdf_bank.shape[1] != self.vocab:
+                raise ValueError(
+                    f"cdf_bank must be (n_phases, vocab={self.vocab}); got "
+                    f"{self.cdf_bank.shape}")
+            if self.cdf_index.shape != (self.rounds,):
+                raise ValueError(
+                    f"cdf_index must be (rounds={self.rounds},); got "
+                    f"{self.cdf_index.shape}")
+            if self.cdf_index.min(initial=0) < 0 or \
+                    self.cdf_index.max(initial=0) >= self.cdf_bank.shape[0]:
+                raise ValueError("cdf_index out of cdf_bank range")
+        if self.grad_density is not None:
+            if self.grad_density.shape != (self.rounds,):
+                raise ValueError(
+                    f"grad_density must be (rounds={self.rounds},); got "
+                    f"{self.grad_density.shape}")
+            if np.any(self.grad_density <= 0) or \
+                    np.any(self.grad_density > 1):
+                raise ValueError("grad_density values must be in (0, 1]")
 
     # ------------------------------------------------------------------ views
     def device_slices(self, lo: int = 0, hi: Optional[int] = None):
@@ -136,7 +176,10 @@ class RunPlan:
         return {"rounds": self.rounds, "n_groups": self.n_groups,
                 "vocab": self.vocab, "global_batch": self.global_batch,
                 "seq_len": self.seq_len, "seed": self.seed,
-                "adaptive": self.adaptive, "n_grid": self.n_grid}
+                "adaptive": self.adaptive, "n_grid": self.n_grid,
+                "n_cdf_phases": (0 if self.cdf_bank is None
+                                 else int(self.cdf_bank.shape[0])),
+                "sparsified": self.grad_density is not None}
 
 
 def fold_data_keys(seed: int, rounds: int) -> np.ndarray:
@@ -153,11 +196,46 @@ def fold_data_keys(seed: int, rounds: int) -> np.ndarray:
     return np.asarray(keys, dtype=np.uint32)
 
 
+def quantize_zipf_trajectory(zipf_as: np.ndarray, vocab: int,
+                             n_phases: int = 8):
+    """Quantise a per-round Zipf-exponent trajectory into a CDF bank.
+
+    Returns ``(cdf_bank (n_phases', vocab) f32, cdf_index (rounds,)
+    int32)`` with ``n_phases' <= n_phases`` distinct levels (nearest-level
+    rounding on a linear grid between the trajectory's extremes; a
+    constant trajectory collapses to one phase).  Each bank row is the
+    cumulative :func:`repro.data.zipf_pmf` at that exponent — the same
+    inverse-CDF table a stationary plan at that exponent would carry.
+    """
+    from ..data import zipf_pmf
+
+    z = np.asarray(zipf_as, dtype=np.float64)
+    if z.ndim != 1 or not z.size:
+        raise ValueError("zipf_as must be a non-empty 1-D trajectory")
+    if np.any(z <= 0):
+        raise ValueError("zipf exponents must be positive")
+    lo, hi = float(z.min()), float(z.max())
+    if hi - lo < 1e-12:
+        levels = np.asarray([lo])
+    else:
+        levels = np.linspace(lo, hi, max(int(n_phases), 2))
+    idx = np.argmin(np.abs(z[:, None] - levels[None, :]), axis=1)
+    used = np.unique(idx)
+    remap = np.zeros(len(levels), dtype=np.int32)
+    remap[used] = np.arange(len(used), dtype=np.int32)
+    bank = np.stack([np.cumsum(zipf_pmf(vocab, levels[u])) for u in used])
+    return bank.astype(np.float32), remap[idx].astype(np.int32)
+
+
 def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
                  n_groups: Optional[int] = None, seed: int = 0,
                  adaptive: bool = False,
                  grid_gammas: Optional[Sequence[float]] = None,
-                 base_gamma: Optional[float] = None) -> RunPlan:
+                 base_gamma: Optional[float] = None,
+                 availability: Optional[np.ndarray] = None,
+                 zipf_as: Optional[np.ndarray] = None,
+                 grad_density: Optional[np.ndarray] = None,
+                 n_cdf_phases: int = 8) -> RunPlan:
     """Lower ``(schedule, job)`` to a :class:`RunPlan`.
 
     ``job`` is a :class:`repro.api.TrainJob` (anything exposing
@@ -174,6 +252,19 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
     scales — the optimizer applies ``lr · scale`` everywhere, so scaling
     the scale IS running at γ_g.  Every row folds the whole stepsize
     policy in, so the grid lane always calls the explicit 4-arg step.
+
+    Scenario channels (typically from a realised
+    :class:`repro.scenarios.ScenarioWorld`; the runtime stays
+    scenario-agnostic — these are plain per-round arrays):
+
+    * ``availability`` — ``(rounds', n)`` 0/1 membership, multiplied into
+      the participation masks (elastic hard-drop),
+    * ``zipf_as`` — ``(rounds',)`` Zipf-exponent trajectory, quantised via
+      :func:`quantize_zipf_trajectory` into ``cdf_bank``/``cdf_index``,
+    * ``grad_density`` — ``(rounds',)`` keep-densities in (0, 1].
+
+    Shorter channels than the plan's rounds are padded with their neutral
+    value (all-up / last exponent / density 1).
     """
     from ..data import DataConfig, HeterogeneousTokenPipeline
 
@@ -182,6 +273,33 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
         schedule, rounds,
         delay_rounds=1 if getattr(job, "delay_rounds", 0) > 0 else 0,
         adaptive=adaptive)
+    R = masks.shape[0]
+    if availability is not None:
+        avail = np.asarray(availability, dtype=np.float32)
+        if avail.ndim != 2 or avail.shape[1] != masks.shape[1]:
+            raise ValueError(
+                f"availability must be (rounds, n_workers="
+                f"{masks.shape[1]}); got {avail.shape}")
+        if avail.shape[0] < R:
+            avail = np.concatenate(
+                [avail, np.ones((R - avail.shape[0], avail.shape[1]),
+                                np.float32)])
+        masks = masks * avail[:R]
+    cdf_bank = cdf_index = None
+    if zipf_as is not None:
+        z = np.asarray(zipf_as, dtype=np.float64)
+        if z.shape[0] < R:
+            z = np.concatenate([z, np.full(R - z.shape[0], z[-1])])
+        cfg_probe = job.make_arch()
+        cdf_bank, cdf_index = quantize_zipf_trajectory(
+            z[:R], cfg_probe.vocab, n_cdf_phases)
+    density = None
+    if grad_density is not None:
+        density = np.asarray(grad_density, dtype=np.float32)
+        if density.shape[0] < R:
+            density = np.concatenate(
+                [density, np.ones(R - density.shape[0], np.float32)])
+        density = density[:R]
     grid_scales = None
     if grid_gammas is not None:
         g = np.asarray([float(x) for x in grid_gammas], np.float32)
@@ -201,4 +319,5 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
         token_cdf=np.cumsum(pipe.pmf).astype(np.float32),
         group_perms=np.stack(pipe.perms).astype(np.int32),
         global_batch=job.global_batch, seq_len=job.seq_len,
-        seed=seed, adaptive=adaptive, grid_scales=grid_scales)
+        seed=seed, adaptive=adaptive, grid_scales=grid_scales,
+        cdf_bank=cdf_bank, cdf_index=cdf_index, grad_density=density)

@@ -603,6 +603,90 @@ def test_backend_grid_lane_matches_sequential_oracle():
 
 
 # ---------------------------------------------------------------------------
+# scenario worlds on the compiled path
+# ---------------------------------------------------------------------------
+SCENARIO = ("straggler:k=1,factor=6,every=4,span=2;"
+            "elastic:k=1,every=4,span=2;"
+            "data_drift:a0=1.1,a1=2.0;"
+            "sparsify:frac=0.5")
+
+
+def test_scenario_channel_lowering_and_validation():
+    """The extra RunPlan channels lower and validate without any executor
+    work: zipf trajectories quantise into a monotone CDF bank, and
+    malformed channels are rejected up front."""
+    from repro.runtime import quantize_zipf_trajectory
+
+    bank, idx = quantize_zipf_trajectory(np.linspace(1.0, 2.0, 12), 97,
+                                         n_phases=4)
+    assert bank.shape[1] == 97 and 2 <= bank.shape[0] <= 4
+    assert idx.shape == (12,)
+    assert idx.min() >= 0 and idx.max() < bank.shape[0]
+    np.testing.assert_allclose(bank[:, -1], 1.0, atol=1e-5)
+    assert np.all(np.diff(bank, axis=1) >= -1e-7)      # each row is a CDF
+    # a constant trajectory collapses to a single phase
+    b1, i1 = quantize_zipf_trajectory(np.full(5, 1.5), 97)
+    assert b1.shape[0] == 1 and np.all(i1 == 0)
+
+    job = _job()
+    plan = _plan_for(_spec(job, T=4), job)
+    common = dict(masks=plan.masks, delay_scales=plan.delay_scales,
+                  data_keys=plan.data_keys, token_cdf=plan.token_cdf,
+                  group_perms=plan.group_perms, global_batch=8, seq_len=16,
+                  seed=0)
+    with pytest.raises(ValueError, match="set together"):
+        RunPlan(cdf_index=np.zeros(4, np.int32), **common)
+    with pytest.raises(ValueError, match="out of cdf_bank range"):
+        RunPlan(cdf_bank=bank, cdf_index=np.full(4, 99, np.int32), **common)
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        RunPlan(grad_density=np.zeros(4, np.float32), **common)
+    with pytest.raises(ValueError, match="grad_density"):
+        RunPlan(grad_density=np.ones(3, np.float32), **common)
+
+
+def test_scenario_plan_scan_matches_eager():
+    """A full four-channel scenario world (straggler speeds + elastic
+    membership + drifting Zipf data + top-k sparsified grads) lowers into
+    ONE RunPlan, and the scan executor still matches the eager oracle —
+    including rounds where elastic hard-drop zeroes a worker's mask entry
+    that held a live receipt."""
+    job = _job()
+    spec = ExperimentSpec(scheduler="fedbuff:b=2", timing="poisson:slow=6",
+                          objective=job, T=12, n_workers=4, seed=3,
+                          scenario=SCENARIO)
+    world = TrainerBackend.world_for(spec, 4)
+    plan = compile_plan(world.schedule, job, rounds=12, n_groups=4, seed=3,
+                        availability=world.availability,
+                        zipf_as=world.zipf_as,
+                        grad_density=world.grad_density)
+    s = plan.summary()
+    assert s["sparsified"] and s["n_cdf_phases"] >= 2
+    # hard-drop: every (round, worker) the world marked down is zeroed...
+    avail = world.availability[:12]
+    assert (avail == 0).any()
+    assert np.all(plan.masks[avail == 0] == 0.0)
+    # ...and at least one of those entries held a receipt before the drop
+    raw, _ = lower_rounds(world.schedule, 12)
+    assert (raw[avail == 0] != 0).any()
+
+    tr = _trainer(job)
+    r_e = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
+    r_s = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=5)                # ragged: 5 + 5 + 2
+    assert r_s.launches == 3 and r_e.launches == 12
+    for k in METRICS:
+        np.testing.assert_allclose(r_s.metrics[k], r_e.metrics[k], **TOL,
+                                   err_msg=f"scenario metric {k}")
+    pe = tr.params_of(r_e.state)
+    ps = tr.params_of(r_s.state)
+    for a, b in zip(jax.tree_util.tree_leaves(pe),
+                    jax.tree_util.tree_leaves(ps)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # 8-virtual-device pooled scan run (ZeRO-sharded pools under shard_map)
 # ---------------------------------------------------------------------------
 @pytest.mark.skipif(not MULTI, reason="needs >= 8 devices "

@@ -1,0 +1,364 @@
+"""Unit suite for ``repro.scenarios`` — grammar, wrappers, transforms, report.
+
+The load-bearing gates:
+
+* the IDENTITY scenario (empty spec, or explicit ``identity`` transforms)
+  reproduces the stationary schedule **bit-for-bit** for every timing
+  pattern — the wrapped path must consume the base RNG streams exactly as
+  the unwrapped engine does,
+* ``TimingModel.sample_round`` (the engine's vectorised path) is
+  bit-identical to a scalar ``sample`` loop — the scalar draw stays the
+  oracle,
+* the ``normal`` pattern really has mean ``s_i`` / variance ``s_i``
+  (the docstring convention, pinned on sampled moments),
+* the τ-report's global row calls the Schedule's OWN statistics, so a
+  stationary report reproduces them exactly (no parallel implementation).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (PATTERNS, TimingModel, build_schedule,
+                        heterogeneous_speeds, make_scheduler)
+from repro.core.theory import RATES
+from repro.scenarios import (DEFAULT_CONSTANTS, DataDrift, ElasticWorkers,
+                             Identity, Scenario, ScenarioScheduler,
+                             SparsifiedGrads, SpeedDrift, Straggler,
+                             TRANSFORMS, WorldClock, parse_scenario,
+                             predicted_rate, realise_world, render_report,
+                             tau_report, window_stats)
+
+N = 5
+T = 24
+
+
+def _pair(scheduler="fedbuff", b=2, pattern="poisson", seed=0):
+    sched = make_scheduler(scheduler, N, b=b, seed=seed)
+    timing = TimingModel(heterogeneous_speeds(N, slow_factor=4.0), pattern,
+                         seed=seed)
+    return sched, timing
+
+
+# ---------------------------------------------------------------------------
+# spec-string grammar
+# ---------------------------------------------------------------------------
+def test_parse_grammar_roundtrip():
+    sc = parse_scenario("straggler:k=2,factor=8.5;elastic:every=3")
+    assert sc.names == ("straggler", "elastic")
+    st, el = sc.transforms
+    assert st.k == 2 and isinstance(st.k, int)          # int coercion
+    assert st.factor == 8.5 and isinstance(st.factor, float)
+    assert el.every == 3 and el.k == 1                  # defaults survive
+    assert sc.spec == "straggler:k=2,factor=8.5;elastic:every=3"
+
+
+def test_parse_empty_and_whitespace():
+    assert parse_scenario("").transforms == ()
+    assert parse_scenario(" ; ").transforms == ()
+    sc = parse_scenario(" drift : amp=0.25 , period=8 ; identity ")
+    assert sc.names == ("drift", "identity")
+    assert sc.transforms[0].amp == 0.25
+
+
+def test_parse_errors_are_valueerrors():
+    with pytest.raises(ValueError, match="unknown transform"):
+        parse_scenario("warp:x=1")
+    with pytest.raises(ValueError, match="malformed"):
+        parse_scenario("straggler:k")
+    with pytest.raises(ValueError, match="bad args"):
+        parse_scenario("straggler:zzz=3")        # unknown kwarg
+    with pytest.raises(ValueError, match="amp"):
+        parse_scenario("drift:amp=2.0")          # constructor validation
+
+
+def test_registry_names_match_classes():
+    assert set(TRANSFORMS) == {"identity", "drift", "straggler", "elastic",
+                               "data_drift", "sparsify"}
+    for name, cls in TRANSFORMS.items():
+        assert cls.name == name
+
+
+# ---------------------------------------------------------------------------
+# identity bit-exactness — THE acceptance gate for the wrapped path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_identity_world_is_bit_for_bit_stationary(pattern):
+    base = build_schedule(*_pair(pattern=pattern), T)
+    # scenario seed deliberately differs from the base seed: it must only
+    # drive the scenario layer, which the identity scenario never consults
+    for spec in ("", "identity", "identity;identity"):
+        sched, timing = _pair(pattern=pattern)
+        world = realise_world(parse_scenario(spec), sched, timing, T,
+                              seed=12345)
+        s = world.schedule
+        np.testing.assert_array_equal(s.workers, base.workers)
+        np.testing.assert_array_equal(s.assign_iters, base.assign_iters)
+        np.testing.assert_array_equal(s.finish_times, base.finish_times)
+        assert s.tau_max() == base.tau_max()
+        assert s.tau_avg() == base.tau_avg()
+        assert s.tau_c() == base.tau_c()
+        assert world.availability is None
+        assert world.zipf_as is None
+        assert world.grad_density is None
+        assert world.rounds == T // 2
+
+
+def test_realise_world_rejects_mismatched_n():
+    sched, _ = _pair()
+    timing = TimingModel(np.ones(N + 1), "fixed")
+    with pytest.raises(ValueError, match="n_workers"):
+        realise_world(Scenario(), sched, timing, T)
+
+
+# ---------------------------------------------------------------------------
+# vectorised timing draws — scalar sample() stays the oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_sample_round_matches_scalar_oracle(pattern):
+    speeds = heterogeneous_speeds(7, slow_factor=5.0)
+    batched = TimingModel(speeds, pattern, seed=3)
+    scalar = TimingModel(speeds, pattern, seed=3)
+    workers = [0, 3, 3, 6, 1]            # duplicates allowed
+    got = batched.sample_round(workers)
+    want = np.array([scalar.sample(w) for w in workers])
+    np.testing.assert_array_equal(got, want)
+    # an empty round consumes no RNG: the streams stay aligned after it
+    assert batched.sample_round([]).shape == (0,)
+    np.testing.assert_array_equal(batched.sample_round([2]),
+                                  [scalar.sample(2)])
+
+
+def test_normal_pattern_moments():
+    """Docstring convention: r = |N(mean s, variance s)| + 1.  At s = 100
+    the fold at zero is ~1e-23 mass, so the sampled moments must pin
+    mean ≈ s + 1 and variance ≈ s (many standard errors of slack)."""
+    s = 100.0
+    tm = TimingModel([s], "normal", seed=0)
+    draws = tm.sample_round(np.zeros(200_000, dtype=np.intp))
+    assert abs(draws.mean() - (s + 1.0)) < 0.25      # SE ≈ 0.022
+    assert abs(draws.var() - s) < 2.5                # SE ≈ 0.32
+    assert draws.min() >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# per-transform behaviour
+# ---------------------------------------------------------------------------
+def test_speed_drift_table():
+    tr = SpeedDrift(period=8, amp=0.5)
+    tr.prepare(4, 16, np.random.default_rng(0))
+    ws = np.arange(4)
+    assert tr.speed_factors(ws, 0)[0] == pytest.approx(1.0)  # sin(0) = 0
+    for q in range(17):
+        f = tr.speed_factors(ws, q)
+        assert np.all(f >= 0.5 - 1e-12) and np.all(f <= 1.5 + 1e-12)
+    # rounds beyond the table clamp to the final row (the t == T boundary)
+    np.testing.assert_array_equal(tr.speed_factors(ws, 99),
+                                  tr.speed_factors(ws, 16))
+    # out-of-phase workers: the slowest seat rotates within one period
+    slowest = {int(np.argmax(tr.speed_factors(ws, q))) for q in range(8)}
+    assert len(slowest) > 1
+    with pytest.raises(ValueError, match="amp"):
+        SpeedDrift(amp=1.0)
+    with pytest.raises(ValueError, match="period"):
+        SpeedDrift(period=0)
+
+
+def test_straggler_windows_hit_exactly_k_workers():
+    tr = Straggler(k=2, factor=8.0, every=4, span=2)
+    tr.prepare(5, 12, np.random.default_rng(0))
+    ws = np.arange(5)
+    hit_rounds = {4, 5, 8, 9, 12}        # [4,6) ∪ [8,10) ∪ [12,13)
+    for q in range(13):
+        f = tr.speed_factors(ws, q)
+        assert np.all((f == 1.0) | (f == 8.0))
+        assert int((f == 8.0).sum()) == (2 if q in hit_rounds else 0)
+    assert np.all(tr.speed_factors(ws, 0) == 1.0)    # round 0 stationary
+    with pytest.raises(ValueError, match="factor"):
+        Straggler(factor=0)
+    with pytest.raises(ValueError, match=">= 1"):
+        Straggler(k=0)
+
+
+def test_elastic_availability_windows():
+    tr = ElasticWorkers(k=2, every=4, span=2)
+    tr.prepare(5, 12, np.random.default_rng(0))
+    a = tr.availability()
+    assert a.shape == (12, 5)
+    down_rounds = {4, 5, 8, 9}           # [4,6) ∪ [8,10); 12 is off-table
+    for q in range(12):
+        assert int((a[q] == 0).sum()) == (2 if q in down_rounds else 0)
+    assert np.all(a[0] == 1.0)           # round 0 stationary
+    # k >= n clamps: the pool is never fully dropped
+    big = ElasticWorkers(k=9, every=2, span=1)
+    big.prepare(3, 8, np.random.default_rng(0))
+    assert np.all(big.availability().sum(axis=1) >= 1)
+
+
+def test_elastic_remap_avoids_down_workers():
+    avail = np.ones((4, 4), np.float32)
+    avail[1:3, 0] = 0.0                  # worker 0 down at rounds 1-2
+
+    class FakeBase:
+        n, wait_b, name = 4, 1, "fake"
+        def concurrency(self):
+            return 4
+        def reset(self):
+            pass
+        def initial_workers(self):
+            return [0, 1]
+        def next_workers(self, finished):
+            return [0, 2]
+
+    clock = WorldClock()
+    ss = ScenarioScheduler(FakeBase(), clock, avail, [0, 1])
+    assert ss.name == "scenario(fake)"
+    assert ss.initial_workers() == [0, 1]        # round 0: everyone up
+    got = ss.next_workers([0])                   # advances clock to round 1
+    assert clock.round == 1
+    assert 0 not in got                          # down worker vacated
+    assert got[1] == 2                           # up workers untouched
+    assert got[0] in (1, 3)                      # remapped to a free worker
+    assert len(set(got)) == len(got)             # still without replacement
+    ss.reset()
+    assert clock.round == 0
+    assert ss.next_workers([0]) == got           # remap RNG reset too
+
+
+def test_data_drift_trajectories():
+    tr = DataDrift(a0=1.0, a1=2.0)
+    tr.prepare(3, 9, np.random.default_rng(0))
+    z = tr.zipf_trajectory()
+    assert z.shape == (9,)
+    assert z[0] == pytest.approx(1.0) and z[-1] == pytest.approx(2.0)
+    assert np.all(np.diff(z) > 0)                # linear ramp
+    osc = DataDrift(a0=1.0, a1=2.0, period=8)
+    osc.prepare(3, 17, np.random.default_rng(0))
+    z2 = osc.zipf_trajectory()
+    assert z2[0] == pytest.approx(1.0)
+    assert z2[4] == pytest.approx(2.0)           # half period peaks at a1
+    assert z2[8] == pytest.approx(1.0)           # full period back at a0
+    with pytest.raises(ValueError, match="positive"):
+        DataDrift(a0=0)
+
+
+def test_sparsify_density_constant_and_adaptive():
+    tr = SparsifiedGrads(frac=0.25)
+    tr.prepare(N, 8, np.random.default_rng(0))
+    np.testing.assert_array_equal(tr.grad_density(None),
+                                  np.full(8, 0.25, np.float32))
+    sched, timing = _pair()                      # b = 2
+    s = build_schedule(sched, timing, 16)        # → 8 rounds
+    ad = SparsifiedGrads(frac=0.25, adaptive=1)
+    ad.prepare(N, 8, np.random.default_rng(0))
+    d = ad.grad_density(s)
+    assert d.shape == (8,) and d.dtype == np.float32
+    tau = s.delays[:16].astype(np.float64).reshape(8, 2).mean(axis=1)
+    np.testing.assert_allclose(
+        d, np.clip(1.0 / (1.0 + tau), 0.25, 1.0).astype(np.float32))
+    with pytest.raises(ValueError, match="frac"):
+        SparsifiedGrads(frac=0.0)
+    with pytest.raises(ValueError, match="frac"):
+        SparsifiedGrads(frac=1.5)
+
+
+# ---------------------------------------------------------------------------
+# realisation: channel composition + determinism
+# ---------------------------------------------------------------------------
+FULL_SPEC = ("straggler:k=1,factor=6,every=4,span=2;"
+             "elastic:k=1,every=4,span=2;"
+             "data_drift:a0=1.1,a1=2.0;"
+             "sparsify:frac=0.5;sparsify:frac=0.25")
+
+
+def test_realise_world_channels_and_composition():
+    world = realise_world(parse_scenario(FULL_SPEC), *_pair(), T, seed=3)
+    assert world.rounds == T // 2
+    assert world.availability is not None
+    assert world.availability.shape == (world.rounds, N)
+    assert (world.availability == 0).any()
+    assert world.zipf_as.shape == (world.rounds,)
+    # composing sparsifiers: the most aggressive (smallest) density wins
+    np.testing.assert_array_equal(world.grad_density,
+                                  np.full(world.rounds, 0.25, np.float32))
+    # fully deterministic in (spec, seed)
+    again = realise_world(parse_scenario(FULL_SPEC), *_pair(), T, seed=3)
+    np.testing.assert_array_equal(world.schedule.workers,
+                                  again.schedule.workers)
+    np.testing.assert_array_equal(world.schedule.finish_times,
+                                  again.schedule.finish_times)
+    np.testing.assert_array_equal(world.availability, again.availability)
+
+
+def test_straggler_world_perturbs_delays():
+    base = build_schedule(*_pair(), T)
+    world = realise_world(parse_scenario("straggler:k=2,factor=20,every=2,"
+                                         "span=2"), *_pair(), T, seed=0)
+    # a 20× transient slowdown must change the realised event order
+    assert not np.array_equal(world.schedule.finish_times,
+                              base.finish_times)
+
+
+# ---------------------------------------------------------------------------
+# τ-report
+# ---------------------------------------------------------------------------
+def test_identity_report_matches_schedule_stats_exactly():
+    sched, timing = _pair()
+    s = build_schedule(sched, timing, 16)
+    rep = tau_report(s, "fedbuff", concurrency=sched.concurrency())
+    g = rep["global"]
+    assert g["tau_max"] == s.tau_max()           # exact — same methods
+    assert g["tau_avg"] == s.tau_avg()
+    assert g["tau_c"] == s.tau_c()
+    assert rep["koloskova"]["tau_avg_le_tau_c"]
+    assert rep["koloskova"]["tau_c_le_concurrency"]
+    ws = rep["windows"]
+    assert ws[0].lo == 0 and ws[-1].hi == 16
+    assert all(a.hi == b.lo for a, b in zip(ws, ws[1:]))  # no gaps
+    assert all(np.isfinite(w.rate) and w.rate > 0 for w in ws)
+    txt = render_report(rep)
+    assert "global" in txt and "fedbuff" in txt and "ok" in txt
+
+
+def test_window_stats_bounds_global():
+    s = build_schedule(*_pair(), 32)
+    ws = window_stats(s, n_windows=4)
+    assert len(ws) == 4
+    assert max(w.tau_max for w in ws) <= s.tau_max()
+    assert max(w.tau_c for w in ws) <= s.tau_c()
+
+
+def test_predicted_rate_covers_every_policy():
+    for policy in RATES:
+        r = predicted_rate(policy, DEFAULT_CONSTANTS, T=64, tau_c=4,
+                           tau_max=9, b=2, n=8)
+        assert np.isfinite(r) and r > 0, policy
+    with pytest.raises(KeyError):
+        predicted_rate("nope", DEFAULT_CONSTANTS, T=1, tau_c=1, tau_max=1,
+                       b=1, n=1)
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec wiring (host-side only — no model builds)
+# ---------------------------------------------------------------------------
+def _spec(**kw):
+    from repro.api import ExperimentSpec
+    kw.setdefault("scheduler", "fedbuff:b=2")
+    kw.setdefault("timing", "poisson:slow=4")
+    kw.setdefault("T", 16)
+    kw.setdefault("n_workers", N)
+    return ExperimentSpec(**kw)
+
+
+def test_spec_scenario_validation_and_world():
+    with pytest.raises(ValueError, match="unknown transform"):
+        _spec(scenario="warp:x=1")
+    spec = _spec(scenario="straggler:k=1,factor=6,every=2,span=1")
+    assert spec.make_scenario().names == ("straggler",)
+    world = spec.build_world()
+    assert world.rounds == 8
+    assert world.schedule.T == 16
+    # None scenario → stationary path; "" → identity wrap; same schedule
+    plain = _spec().build_schedule()
+    ident = _spec(scenario="").build_schedule()
+    np.testing.assert_array_equal(ident.workers, plain.workers)
+    np.testing.assert_array_equal(ident.finish_times, plain.finish_times)
+    assert _spec().make_scenario().transforms == ()

@@ -1,0 +1,127 @@
+"""Golden-trace regression tests for realised scenario worlds.
+
+Companion to ``tests/test_engine_golden.py``: that suite freezes the
+STATIONARY engine output; this one freezes the scenario layer on top of
+it — one straggler world and one elastic world per timing pattern, with
+the realised ``workers``/``assign_iters`` ordering, the paper's delay
+statistics and the availability channel all pinned **bit-identical** to
+fixtures under ``tests/fixtures/scenarios``.  A silent change in the
+wrapper RNG discipline (transform trajectory seeding, remap stream
+consumption, clock advancement) would shift every non-stationary result
+downstream while each individual run still "looks plausible".
+
+Regenerate (ONLY after an intentional semantic change, and say so in the
+commit message):
+
+    PYTHONPATH=src python tests/test_scenarios_golden.py --regen
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (PATTERNS, TimingModel, heterogeneous_speeds,
+                        make_scheduler)
+from repro.scenarios import parse_scenario, realise_world
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures",
+                           "scenarios")
+
+N_WORKERS = 5
+T = 24
+SEED = 0
+SLOW = 4.0
+WAIT_B = 2      # fedbuff keeps queueing + waiting semantics in play
+
+#: fixture worlds — short windows so every trajectory fires inside T
+WORLDS = {
+    "straggler": "straggler:k=2,factor=8,every=3,span=2",
+    "elastic": "elastic:k=1,every=3,span=2",
+}
+
+CASES = [(w, p) for w in sorted(WORLDS) for p in PATTERNS]
+
+
+def _build(world: str, pattern: str):
+    sched = make_scheduler("fedbuff", N_WORKERS, b=WAIT_B, seed=SEED)
+    timing = TimingModel(heterogeneous_speeds(N_WORKERS, slow_factor=SLOW),
+                         pattern, seed=SEED)
+    return realise_world(parse_scenario(WORLDS[world]), sched, timing, T,
+                         seed=SEED)
+
+
+def _fixture_path(world: str, pattern: str) -> str:
+    return os.path.join(FIXTURE_DIR, f"{world}_{pattern}.json")
+
+
+def _to_record(w) -> dict:
+    s = w.schedule
+    return {
+        "workers": [int(x) for x in s.workers],
+        "assign_iters": [int(x) for x in s.assign_iters],
+        "unfinished_assign_iters": [int(x)
+                                    for x in s.unfinished_assign_iters],
+        "tau_max": s.tau_max(),
+        "tau_avg": s.tau_avg(),     # exact float64 repr round-trips JSON
+        "tau_c": s.tau_c(),
+        "wait_b": s.wait_b,
+        "rounds": w.rounds,
+        "availability": (None if w.availability is None
+                         else [[int(v) for v in row]
+                               for row in w.availability]),
+    }
+
+
+@pytest.mark.parametrize("world,pattern", CASES,
+                         ids=[f"{w}-{p}" for w, p in CASES])
+def test_world_matches_golden_trace(world, pattern):
+    path = _fixture_path(world, pattern)
+    assert os.path.exists(path), (
+        f"missing fixture {path}; regenerate with "
+        "`PYTHONPATH=src python tests/test_scenarios_golden.py --regen`")
+    with open(path) as f:
+        want = json.load(f)
+    got = _to_record(_build(world, pattern))
+    np.testing.assert_array_equal(got["workers"], want["workers"])
+    np.testing.assert_array_equal(got["assign_iters"], want["assign_iters"])
+    np.testing.assert_array_equal(got["unfinished_assign_iters"],
+                                  want["unfinished_assign_iters"])
+    assert got["tau_max"] == want["tau_max"]
+    assert got["tau_avg"] == want["tau_avg"]
+    assert got["tau_c"] == want["tau_c"]
+    assert got["wait_b"] == want["wait_b"]
+    assert got["rounds"] == want["rounds"]
+    if want["availability"] is None:
+        assert got["availability"] is None
+    else:
+        np.testing.assert_array_equal(got["availability"],
+                                      want["availability"])
+
+
+def test_realise_world_is_deterministic():
+    """Two realisations of the same world must agree with themselves, not
+    just the fixture (guards against hidden global RNG state)."""
+    a = _to_record(_build("elastic", "poisson"))
+    b = _to_record(_build("elastic", "poisson"))
+    assert a == b
+
+
+def _regen():
+    os.makedirs(FIXTURE_DIR, exist_ok=True)
+    for world, pattern in CASES:
+        rec = _to_record(_build(world, pattern))
+        rec["_scenario"] = {"n_workers": N_WORKERS, "T": T, "seed": SEED,
+                            "slow_factor": SLOW, "wait_b": WAIT_B,
+                            "spec": WORLDS[world]}
+        with open(_fixture_path(world, pattern), "w") as f:
+            json.dump(rec, f, indent=1)
+        print("wrote", _fixture_path(world, pattern))
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)
