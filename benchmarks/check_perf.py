@@ -1,27 +1,32 @@
 """CI gate: fail on a dispatch-layer perf regression vs the committed
-baseline ``benchmarks/BENCH_runtime.json``.
+baseline (``benchmarks/BENCH_runtime.json`` / ``benchmarks/BENCH_serve.json``).
 
 Absolute rounds/s across heterogeneous CI hosts is pure noise — a GitHub
 runner and the laptop that wrote the baseline differ by far more than any
-real regression.  What IS machine-portable is each row's rounds/s
-normalised by the SAME payload's eager row: that ratio isolates the
-dispatch/metric-transport layer (launch amortisation, readback barriers,
-tap overhead) from raw core speed, which is exactly what this bench
-exists to track.  The gate fails when any scan/grid row's normalised
-throughput (or the grid lane's ``grid_speedup``) drops more than
-``--tolerance`` (default 30%) below the baseline's.
+real regression.  What IS machine-portable is each row's throughput
+normalised by the SAME payload's reference row — the eager row for the
+``runtime_dispatch_ab`` kind, the lock-step serving row for the
+``serve_slots`` kind: that ratio isolates the dispatch/metric-transport
+layer (launch amortisation, readback barriers, tap overhead, slot-loop
+bookkeeping) from raw core speed, which is exactly what these benches
+exist to track.  The gate fails when any subject row's normalised
+throughput (or the grid lane's ``grid_speedup``, or the slot lane's
+``occupancy``) drops more than ``--tolerance`` (default 30%) below the
+baseline's.
 
-Only the ``runtime_dispatch_ab`` bench kind has a regression gate; any
-other payload (e.g. the ``scenarios`` smoke bench, or a future kind this
-script predates) is SKIPPED loudly with exit 0 — an artifact-only bench
-must never fail CI just because the gate doesn't know how to read it.
-A missing file skips the same way (benches run under ``if: always()``,
-so an earlier failed step may legitimately leave no payload behind).
+Any other payload kind (e.g. the ``scenarios`` smoke bench, or a future
+kind this script predates) is SKIPPED loudly with exit 0 — an
+artifact-only bench must never fail CI just because the gate doesn't know
+how to read it.  A missing file skips the same way (benches run under
+``if: always()``, so an earlier failed step may legitimately leave no
+payload behind).
 
 Usage::
 
     python benchmarks/check_perf.py experiments/figs/BENCH_runtime.json \
         benchmarks/BENCH_runtime.json --tolerance 0.3
+    python benchmarks/check_perf.py experiments/figs/BENCH_serve.json \
+        benchmarks/BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -30,11 +35,8 @@ import json
 import os
 import sys
 
-#: bench kinds this gate knows how to compare (payload "bench" field)
-KNOWN_KINDS = {"runtime_dispatch_ab"}
 
-
-def _rows(payload: dict) -> dict:
+def _rows(payload: dict) -> tuple[dict, float]:
     """(runtime, metrics, K) -> entry, plus the eager rounds/s."""
     eager = [e for e in payload["entries"] if e["runtime"] == "eager"]
     if not eager:
@@ -45,7 +47,7 @@ def _rows(payload: dict) -> dict:
     return rows, float(eager[0]["rounds_per_s"])
 
 
-def check(current: dict, baseline: dict, tolerance: float) -> list:
+def check_runtime(current: dict, baseline: dict, tolerance: float) -> list:
     cur_rows, cur_eager = _rows(current)
     base_rows, base_eager = _rows(baseline)
     failures = []
@@ -70,8 +72,19 @@ def check(current: dict, baseline: dict, tolerance: float) -> list:
                 f"{floor:.3f} (baseline {base_n:.3f}, "
                 f"tolerance {tolerance:.0%})")
         if "grid_speedup" in base:
+            if "grid_speedup" not in cur:
+                # a vanished field is a bench-shape change, not a 0.000
+                # throughput — report it as such instead of a bogus floor
+                # comparison
+                failures.append(
+                    f"{key}: baseline has grid_speedup but the current "
+                    "row lacks the field")
+                print(f"{'  grid_speedup':<28} "
+                      f"{float(base['grid_speedup']):>8.3f} {'':>8} "
+                      f"{'':>8}  MISSING")
+                continue
             g_base = float(base["grid_speedup"])
-            g_cur = float(cur.get("grid_speedup", 0.0))
+            g_cur = float(cur["grid_speedup"])
             g_floor = g_base * (1.0 - tolerance)
             g_ok = g_cur >= g_floor
             print(f"{'  grid_speedup':<28} {g_base:>8.3f} {g_cur:>8.3f} "
@@ -83,12 +96,82 @@ def check(current: dict, baseline: dict, tolerance: float) -> list:
     return failures
 
 
+def _serve_rows(payload: dict) -> tuple[dict, float]:
+    """mode-key -> entry, plus the lock-step tok/s normaliser."""
+    lock = [e for e in payload["entries"] if e["mode"] == "lockstep"]
+    if not lock:
+        raise SystemExit("payload has no lockstep row to normalise against")
+    rows = {}
+    for e in payload["entries"]:
+        key = (e["mode"] if e["mode"] == "lockstep"
+               else (e["mode"], e["n_slots"], e.get("admission", "pure")))
+        rows[key] = e
+    return rows, float(lock[0]["tok_per_s"])
+
+
+def check_serve(current: dict, baseline: dict, tolerance: float) -> list:
+    """Slot-serving gate: tok/s normalised by the same run's lock-step
+    row (machine-portable), plus the realised slot occupancy — that one
+    is a deterministic function of the admission bookkeeping, so a drop
+    means the slot loop is leaving lanes idle, not that the host is slow."""
+    cur_rows, cur_lock = _serve_rows(current)
+    base_rows, base_lock = _serve_rows(baseline)
+    failures = []
+    print(f"{'row':<34} {'base':>8} {'now':>8} {'floor':>8}  verdict")
+    for key, base in sorted(base_rows.items(), key=str):
+        if key == "lockstep":
+            continue                      # the normaliser, not a subject
+        cur = cur_rows.get(key)
+        if cur is None:
+            failures.append(f"{key}: missing from current payload")
+            print(f"{str(key):<34} {'':>8} {'':>8} {'':>8}  MISSING")
+            continue
+        base_n = float(base["tok_per_s"]) / base_lock
+        cur_n = float(cur["tok_per_s"]) / cur_lock
+        floor = base_n * (1.0 - tolerance)
+        ok = cur_n >= floor
+        print(f"{str(key):<34} {base_n:>8.3f} {cur_n:>8.3f} "
+              f"{floor:>8.3f}  {'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"{key}: normalised tok/s {cur_n:.3f} < floor "
+                f"{floor:.3f} (baseline {base_n:.3f}, "
+                f"tolerance {tolerance:.0%})")
+        if "occupancy" in base:
+            if "occupancy" not in cur:
+                failures.append(
+                    f"{key}: baseline has occupancy but the current row "
+                    "lacks the field")
+                print(f"{'  occupancy':<34} "
+                      f"{float(base['occupancy']):>8.3f} {'':>8} "
+                      f"{'':>8}  MISSING")
+                continue
+            o_base = float(base["occupancy"])
+            o_cur = float(cur["occupancy"])
+            o_floor = o_base * (1.0 - tolerance)
+            o_ok = o_cur >= o_floor
+            print(f"{'  occupancy':<34} {o_base:>8.3f} {o_cur:>8.3f} "
+                  f"{o_floor:>8.3f}  {'ok' if o_ok else 'REGRESSION'}")
+            if not o_ok:
+                failures.append(
+                    f"{key}: occupancy {o_cur:.3f} < floor {o_floor:.3f}")
+    return failures
+
+
+#: bench kinds this gate knows how to compare (payload "bench" field)
+CHECKERS = {
+    "runtime_dispatch_ab": check_runtime,
+    "serve_slots": check_serve,
+}
+KNOWN_KINDS = set(CHECKERS)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="freshly produced BENCH_runtime.json")
+    ap.add_argument("current", help="freshly produced bench JSON")
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--tolerance", type=float, default=0.3,
-                    help="allowed fractional drop in normalised rounds/s "
+                    help="allowed fractional drop in normalised throughput "
                          "(default 0.3 = 30%%)")
     args = ap.parse_args()
     payloads = {}
@@ -102,16 +185,21 @@ def main():
             return
         with open(path) as f:
             payloads[label] = json.load(f)
-    for label, payload in payloads.items():
-        kind = payload.get("bench", "<missing>")
+    kinds = {label: payload.get("bench", "<missing>")
+             for label, payload in payloads.items()}
+    for label, kind in kinds.items():
         if kind not in KNOWN_KINDS:
             print(f"SKIP: {label} bench file {getattr(args, label)!r} has "
                   f"kind {kind!r}, which this gate cannot compare (known: "
                   f"{sorted(KNOWN_KINDS)}) — treating as artifact-only, "
                   "not a failure")
             return
-    failures = check(payloads["current"], payloads["baseline"],
-                     args.tolerance)
+    if kinds["current"] != kinds["baseline"]:
+        raise SystemExit(
+            f"bench kind mismatch: current is {kinds['current']!r} but "
+            f"baseline is {kinds['baseline']!r} — not comparable")
+    failures = CHECKERS[kinds["current"]](
+        payloads["current"], payloads["baseline"], args.tolerance)
     if failures:
         print("\nPERF REGRESSION vs committed baseline:")
         for msg in failures:

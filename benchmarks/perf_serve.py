@@ -1,0 +1,138 @@
+"""Serving smoke bench: lock-step oracle vs slot-based continuous batching.
+
+One lock-step row (the normaliser) plus one slot row per configuration:
+same tiny arch, same prompt stream, same per-request token budget.  Each
+slot row reports decode throughput, realised slot occupancy and mean
+time-to-first-token — occupancy and TTFT are deterministic functions of
+the admission bookkeeping (the slot loop reads no device values), so they
+double as correctness canaries, not just perf numbers.
+
+The point is a CI canary with two properties:
+
+* the whole slot lane (ragged decode, traced-slot admission, ordered
+  io_callback tap) compiles and runs end-to-end on every push,
+* tok/s normalised by the SAME run's lock-step row shows what slot
+  bookkeeping COSTS at dispatch level, machine-portably.
+
+Writes ``experiments/figs/BENCH_serve.json`` (``bench: "serve_slots"``),
+gated by ``benchmarks/check_perf.py`` against the committed
+``benchmarks/BENCH_serve.json`` baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_serve --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+
+from repro.api import ExperimentSpec, ServeJob
+from repro.api.backends import ServeBackend
+
+#: smallest decodable arch — the bench measures the serving dispatch
+#: layer (slot bookkeeping, admission, tap), not model compute
+TINY = (("n_layers", 1), ("d_model", 8), ("n_heads", 1), ("n_kv_heads", 1),
+        ("d_ff", 16), ("vocab", 127))
+
+#: slot rows: (label, n_slots, n_requests, admission, arrival)
+SLOT_ROWS = (
+    ("static_full", 4, 4, "pure", None),          # parity shape: slots = reqs
+    ("rotating", 2, 6, "pure", None),             # reqs rotate through slots
+    ("poisson_shuffled", 2, 6, "shuffled", "poisson:gap=4"),
+)
+
+
+def run(out: str = "experiments/figs", quick: bool = False,
+        steps: int = 0, arch: str = "qwen2-0.5b") -> dict:
+    os.makedirs(out, exist_ok=True)
+    T = steps or (16 if quick else 48)
+    prompt_len = 8
+    backend = ServeBackend()
+    entries = []
+
+    def serve_spec(**kw):
+        return ExperimentSpec(
+            objective=ServeJob(arch=arch, prompt_len=prompt_len,
+                               arch_overrides=TINY, **kw), T=T, seed=0)
+
+    # -- lock-step normaliser (warm: second run reuses the cached jit) ------
+    spec = serve_spec(batch=4)
+    backend.run(spec)                              # compile
+    res = backend.run(spec)
+    lock = {
+        "mode": "lockstep",
+        "batch": 4,
+        "steps": T,
+        "decode_seconds": round(res.extra["decode_seconds"], 4),
+        "tok_per_s": round(res.extra["tok_per_s"], 2),
+    }
+    entries.append(lock)
+    print(f"{'lockstep':<18} tok/s={lock['tok_per_s']:>9}")
+
+    # -- slot rows ----------------------------------------------------------
+    for label, n_slots, n_req, admission, arrival in SLOT_ROWS:
+        spec = serve_spec(batch=4, n_slots=n_slots, n_requests=n_req,
+                          admission=admission, arrival=arrival,
+                          steps_per_launch=8)
+        backend.run(spec)                          # compile
+        res = backend.run(spec)
+        rep = res.extra["tau_report"]
+        entry = {
+            "mode": label,
+            "n_slots": n_slots,
+            "n_requests": n_req,
+            "admission": admission,
+            "arrival": arrival,
+            "steps": T,
+            "decode_seconds": round(res.extra["decode_seconds"], 4),
+            "tok_per_s": round(res.extra["tok_per_s"], 2),
+            "occupancy": round(res.extra["occupancy"], 4),
+            "ttft_mean_steps": round(
+                float(np.mean(res.extra["ttft_steps"])), 2),
+            "decode_steps": res.extra["decode_steps"],
+            "chunks": res.extra["chunks"],
+            "tau_c": rep["global"]["tau_c"],
+        }
+        entries.append(entry)
+        print(f"{label:<18} tok/s={entry['tok_per_s']:>9} "
+              f"occ={entry['occupancy']:>6} "
+              f"ttft={entry['ttft_mean_steps']:>5} "
+              f"tau_c={entry['tau_c']:>2}")
+
+    payload = {
+        "bench": "serve_slots",
+        "backend": jax.default_backend(),
+        "arch": arch,
+        "steps": T,
+        "prompt_len": prompt_len,
+        "note": ("warm runs on a tiny arch; absolute tok/s is "
+                 "machine-local — read slot rows normalised by the "
+                 "lockstep row of the same run (check_perf.py does).  "
+                 "occupancy and ttft are deterministic admission "
+                 "bookkeeping, portable across machines."),
+        "entries": entries,
+    }
+    path = os.path.join(out, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="16 decode steps instead of 48")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--out", default="experiments/figs")
+    args = ap.parse_args()
+    run(out=args.out, quick=args.quick, steps=args.steps, arch=args.arch)
+
+
+if __name__ == "__main__":
+    main()

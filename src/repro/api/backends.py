@@ -339,7 +339,15 @@ class TrainerBackend:
 
 
 class ServeBackend:
-    """Prefill + batched decode through the sharded ``Server`` driver."""
+    """Prefill + batched decode through the sharded ``Server`` driver.
+
+    A :class:`ServeJob` with ``n_slots`` set routes to the slot-based
+    continuous-batching lane (:class:`repro.distributed.SlotServer`):
+    requests flow through persistent decode slots under a
+    scheduler-registry admission policy, and the realised admission trace
+    lowers to an ordinary ``Schedule`` (``extra["schedule"]`` /
+    ``extra["tau_report"]``).  The lock-step path stays the parity oracle.
+    """
 
     name = "serve"
 
@@ -347,26 +355,35 @@ class ServeBackend:
         self.mesh = mesh
         self.rules = rules
 
-    def run(self, spec: ExperimentSpec) -> RunResult:
+    def _setup(self, spec: ExperimentSpec):
         import jax
-        import jax.numpy as jnp
-        from ..distributed import Server, ServeConfig
         from ..distributed.sharding import DEFAULT_RULES
         from ..launch.mesh import make_host_mesh
-        from ..models import init_params, prefill
+        from ..models import init_params
 
         job = spec.objective
         if not isinstance(job, ServeJob):
             raise TypeError("ServeBackend needs a ServeJob objective")
-        t0 = time.time()
         cfg = job.make_arch()
         mesh = self.mesh if self.mesh is not None else make_host_mesh()
         rules = self.rules if self.rules is not None else DEFAULT_RULES
+        params = init_params(cfg, jax.random.PRNGKey(spec.seed))
+        return job, cfg, mesh, rules, params
+
+    def run(self, spec: ExperimentSpec) -> RunResult:
+        if getattr(spec.objective, "n_slots", None):
+            return self._run_slots(spec)
+        import jax
+        import jax.numpy as jnp
+        from ..distributed import Server, ServeConfig
+        from ..models import prefill
+
+        t0 = time.time()
+        job, cfg, mesh, rules, params = self._setup(spec)
         ctx = job.prompt_len + spec.T
         server = Server(cfg, mesh, ServeConfig(batch=job.batch, ctx_len=ctx,
                                                temperature=job.temperature,
                                                seed=spec.seed), rules=rules)
-        params = init_params(cfg, jax.random.PRNGKey(spec.seed))
         prompts = np.random.default_rng(spec.seed).integers(
             0, cfg.vocab, (job.batch, job.prompt_len)).astype(np.int32)
         last, cache = prefill(cfg, params, {"tokens": jnp.asarray(prompts)},
@@ -382,6 +399,49 @@ class ServeBackend:
             extra={"prompts": prompts, "arch": cfg.name,
                    "decode_seconds": dt,
                    "tok_per_s": job.batch * (spec.T - 1) / max(dt, 1e-9)})
+
+    def _run_slots(self, spec: ExperimentSpec) -> RunResult:
+        """Continuous batching: ``n_requests`` requests through ``n_slots``
+        ragged decode lanes; admissions follow the job's scheduler-registry
+        policy, arrivals its timing-registry pattern."""
+        from ..distributed import (SlotServer, SlotConfig, draw_arrivals,
+                                   parse_admission)
+        from ..scenarios import tau_report
+
+        t0 = time.time()
+        job, cfg, mesh, rules, params = self._setup(spec)
+        n_req = job.n_requests or job.batch
+        ctx = job.prompt_len + spec.T
+        server = SlotServer(
+            cfg, mesh,
+            SlotConfig(n_slots=job.n_slots, ctx_len=ctx,
+                       temperature=job.temperature, seed=spec.seed,
+                       steps_per_launch=job.steps_per_launch),
+            rules=rules)
+        # same prompt stream as the lock-step oracle (first batch rows
+        # coincide when n_requests == batch — the parity gate relies on it)
+        prompts = np.random.default_rng(spec.seed).integers(
+            0, cfg.vocab, (n_req, job.prompt_len)).astype(np.int32)
+        arrivals = draw_arrivals(n_req, job.arrival, seed=spec.seed)
+        t_dec = time.time()
+        res = server.serve(params, prompts, spec.T,
+                           admission=job.admission, arrivals=arrivals)
+        dt = time.time() - t_dec
+        return RunResult(
+            spec=spec, backend=self.name, x=res.tokens,
+            schedule=res.schedule, seconds=time.time() - t0,
+            extra={"prompts": prompts, "arch": cfg.name,
+                   "decode_seconds": dt,
+                   "tok_per_s": n_req * (spec.T - 1) / max(dt, 1e-9),
+                   "n_slots": job.n_slots, "admission": job.admission,
+                   "arrivals": arrivals, "ttft_steps": res.ttft_steps,
+                   "occupancy": res.occupancy,
+                   "decode_steps": res.decode_steps, "chunks": res.chunks,
+                   "tap_rows": res.tap_rows,
+                   "tau_report": tau_report(
+                       res.schedule, parse_admission(job.admission)[0],
+                       concurrency=job.n_slots,
+                       scenario_spec=job.arrival or "")})
 
 
 def run(spec: ExperimentSpec, backend: Optional[Backend] = None) -> RunResult:

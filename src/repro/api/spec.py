@@ -148,8 +148,21 @@ class TrainJob:
 class ServeJob:
     """Objective for the serve backend: batched greedy/temperature decoding.
 
-    ``ExperimentSpec.T`` counts decode steps; scheduler/timing fields are
-    unused (serving has no job-assignment policy).
+    ``ExperimentSpec.T`` counts decode steps (per-request token budget).
+
+    Two serving modes share this job:
+
+    * lock-step (default, ``n_slots=None``) — a fixed batch decodes in
+      unison through :class:`repro.distributed.Server`; scheduler/timing
+      fields are unused.
+    * continuous batching (``n_slots`` set) — ``n_requests`` requests flow
+      through ``n_slots`` persistent decode lanes
+      (:class:`repro.distributed.SlotServer`); ``admission`` picks which
+      queued request fills a freed slot (scheduler-registry compact spec,
+      e.g. ``"pure"`` / ``"fedbuff:b=2"``) and ``arrival`` draws
+      inter-arrival gaps from the timing registry
+      (``"pattern[:gap=G]"``, e.g. ``"poisson:gap=4"``; ``None`` = all
+      requests queued at step 0).
     """
 
     arch: str = "qwen2-0.5b"
@@ -157,12 +170,31 @@ class ServeJob:
     batch: int = 4
     prompt_len: int = 12
     temperature: float = 0.0
+    arch_overrides: tuple = ()          # ((field, value), ...)
+    n_slots: Optional[int] = None       # set → continuous-batching lane
+    n_requests: Optional[int] = None    # default: batch
+    admission: str = "pure"             # scheduler-registry compact spec
+    arrival: Optional[str] = None       # timing-registry "pattern[:gap=G]"
+    steps_per_launch: int = 8           # decode steps per chunk launch
+
+    def __post_init__(self):
+        if self.n_slots is not None and self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if self.steps_per_launch < 1:
+            raise ValueError("steps_per_launch must be >= 1")
+        from ..distributed.admission import parse_admission
+        parse_admission(self.admission)     # fail fast on grammar errors
+        if self.arrival:
+            from ..distributed.admission import draw_arrivals
+            draw_arrivals(1, self.arrival)
 
     def make_arch(self):
         from ..configs import get_arch
         cfg = get_arch(self.arch)
         if self.reduced:
             cfg = cfg.reduced().with_(remat="none")
+        if self.arch_overrides:
+            cfg = cfg.with_(**dict(self.arch_overrides))
         return cfg
 
 

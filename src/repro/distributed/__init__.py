@@ -4,8 +4,14 @@ from .sharding import (Rules, DEFAULT_RULES, SEQ_PARALLEL_RULES, auto_rules,
                        pooled_pspec)
 from .async_trainer import AsyncTrainer, AsyncConfig
 from .serve import Server, ServeConfig
+from .slot_serve import SlotServer, SlotConfig, ServeResult
+from .admission import (AdmissionPolicy, AdmissionTrace, draw_arrivals,
+                        parse_admission)
 
 __all__ = ["Rules", "DEFAULT_RULES", "SEQ_PARALLEL_RULES", "auto_rules", "logical_pspec", "zero_pspec",
            "tree_pspecs", "tree_shardings", "bytes_per_device",
            "pool_axes", "pool_shard_count", "pooled_pspec",
-           "AsyncTrainer", "AsyncConfig", "Server", "ServeConfig"]
+           "AsyncTrainer", "AsyncConfig", "Server", "ServeConfig",
+           "SlotServer", "SlotConfig", "ServeResult",
+           "AdmissionPolicy", "AdmissionTrace", "draw_arrivals",
+           "parse_admission"]

@@ -33,6 +33,8 @@ class Server:
     def __init__(self, cfg: ArchConfig, mesh: Mesh, serve: ServeConfig,
                  rules: Rules = DEFAULT_RULES):
         self.cfg, self.mesh, self.serve, self.rules = cfg, mesh, serve, rules
+        self._jit_steps = {}          # donate_cache -> cached jit wrapper
+        self._key = None              # sampling key, advanced across calls
 
     # ---- shardings -----------------------------------------------------------
     def cache_shardings(self):
@@ -60,24 +62,37 @@ class Server:
         return sharded_trace(step, self.mesh, self.rules)
 
     def jit_serve_step(self, donate_cache: bool = True):
-        tok_sh = NamedSharding(self.mesh, P(self.rules.data_axes[-1]
-                                            if self.serve.batch > 1 else None))
-        return jax.jit(
-            self.serve_step_fn(),
-            in_shardings=(self.param_shardings(), self.cache_shardings(),
-                          tok_sh, NamedSharding(self.mesh, P())),
-            donate_argnums=(1,) if donate_cache else (),
-        )
+        # cached per donation mode: a fresh jax.jit wrapper per call would
+        # carry its own tracing cache, silently recompiling every generate()
+        step = self._jit_steps.get(donate_cache)
+        if step is None:
+            tok_sh = NamedSharding(self.mesh,
+                                   P(self.rules.data_axes[-1]
+                                     if self.serve.batch > 1 else None))
+            step = jax.jit(
+                self.serve_step_fn(),
+                in_shardings=(self.param_shardings(), self.cache_shardings(),
+                              tok_sh, NamedSharding(self.mesh, P())),
+                donate_argnums=(1,) if donate_cache else (),
+            )
+            self._jit_steps[donate_cache] = step
+        return step
 
     # ---- driver ----------------------------------------------------------------
     def generate(self, params, prompts: np.ndarray, n_steps: int,
-                 start_pos: int = 0, cache=None):
+                 start_pos: int = 0, cache=None, key=None):
         """prompts: (B,) current last tokens.  Greedy/temperature sampling.
 
         Decodes through :meth:`jit_serve_step` — the sharded, cache-donating
         compiled step — so the driver and the single-step latency benchmarks
         execute the same program.  Pass a prefilled ``cache`` to continue
         from a prompt; otherwise decoding starts from an empty cache.
+
+        Sampling state: the server's PRNG key is seeded lazily from
+        ``serve.seed`` and THREADED across calls — successive sampled calls
+        draw fresh streams instead of replaying the seed.  Pass an explicit
+        ``key`` for one-off reproducible draws; it is consumed for this
+        call only and the persistent key is left untouched.
         """
         if cache is None:
             cache = M.init_cache(self.cfg, self.serve.batch, self.serve.ctx_len)
@@ -85,7 +100,11 @@ class Server:
         if n_steps <= 0:
             return np.zeros((toks.shape[0], 0), dtype=np.int32)
         step = self.jit_serve_step()
-        key = jax.random.PRNGKey(self.serve.seed)
+        explicit_key = key is not None
+        if not explicit_key:
+            if self._key is None:
+                self._key = jax.random.PRNGKey(self.serve.seed)
+            key = self._key
         out = []
         for i in range(n_steps):
             logits, cache = step(params, cache, toks, jnp.int32(start_pos + i))
@@ -96,4 +115,6 @@ class Server:
             else:
                 toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out.append(np.asarray(toks))
+        if not explicit_key:
+            self._key = key            # persist the advanced stream
         return np.stack(out, axis=1)   # (B, n_steps)

@@ -1,0 +1,421 @@
+"""Slot-based continuous-batching serving: one compiled ragged decode loop.
+
+The lock-step :class:`~repro.distributed.serve.Server` decodes a fixed
+batch where every request starts and finishes together.  This module is
+the production shape: ``n_slots`` persistent decode lanes, each carrying
+its own position / activity / budget, stepped by ONE compiled program —
+the serving analogue of the executor's per-round participation masks.
+
+Design, mirroring the repo's schedule-is-value-independent thesis:
+
+* **Device**: a chunk of ``steps_per_launch`` ragged decode steps runs as
+  a ``lax.scan`` whose body calls ``models.decode_step`` with VECTOR
+  ``pos`` (per-slot positions, ``cache_specs(..., ragged=True)``).
+  Inactive slots freeze (token/pos/remaining held by the active mask) and
+  their ring re-writes are idempotent, so masking replaces control flow —
+  the program never retraces as requests come and go.  Each step streams
+  ``(step, tokens, active)`` host-ward through an ordered ``io_callback``
+  tap (the PR 5 idiom), so per-request consumers receive tokens while the
+  device keeps decoding — the host never barriers the loop.
+* **Host**: with a fixed per-request token budget there is no
+  content-dependent exit, so admissions, completions, occupancy and TTFT
+  are pure bookkeeping — ZERO device readbacks steer the loop.  Admission
+  (which queued request fills a freed slot, at chunk boundaries) is a
+  registry scheduler via :class:`~repro.distributed.admission.AdmissionPolicy`,
+  and the realised trace lowers to an ordinary ``Schedule`` for
+  ``scenarios.tau_report``.
+* **Prefill** is folded in per admitted request: a cached batch-1 prefill
+  jit produces the first token + a ctx-length cache, and a cached ``admit``
+  jit writes the row into the slot cache at a *traced* slot index — one
+  compile covers every admission.
+
+Compiled artifacts are cached on the instance (the PlanExecutor rule: a
+fresh closure per call would silently recompile every run), asserted by
+:meth:`SlotServer.compile_counts`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+from .admission import AdmissionPolicy, AdmissionTrace, parse_admission
+from .sharding import Rules, DEFAULT_RULES, sharded_trace, tree_shardings
+
+
+@dataclasses.dataclass
+class SlotConfig:
+    """Knobs of the slot loop.
+
+    ``steps_per_launch`` is the decode analogue of the executor's
+    ``rounds_per_launch``: admissions land at chunk boundaries, so it
+    trades admission latency against dispatch amortisation.
+    """
+
+    n_slots: int
+    ctx_len: int
+    temperature: float = 0.0     # 0 = greedy
+    seed: int = 0
+    steps_per_launch: int = 8
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if self.steps_per_launch < 1:
+            raise ValueError("steps_per_launch must be >= 1")
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Per-request token matrix + the realised admission world."""
+
+    tokens: np.ndarray           # (n_requests, max_new) int32
+    schedule: object             # repro.core.engine.Schedule of admissions
+    ttft_steps: np.ndarray       # (n_requests,) admission − arrival (steps)
+    occupancy: float             # mean fraction of busy slot-steps
+    decode_steps: int            # launched scan steps (incl. drained tail)
+    chunks: int                  # XLA launches of the chunk program
+    tap_rows: int                # ordered io_callback rows delivered
+
+
+class SlotServer:
+    """Continuous-batching decode over ``n_slots`` ragged lanes."""
+
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, slots: SlotConfig,
+                 rules: Rules = DEFAULT_RULES):
+        if cfg.family in ("vlm", "audio"):
+            raise NotImplementedError(
+                f"slot serving admits token-only prompts; the {cfg.family!r} "
+                "family needs per-request modality inputs (follow-up)")
+        self.cfg, self.mesh, self.slots, self.rules = cfg, mesh, slots, rules
+        self._chunk_fn = None         # cached jitted chunk program
+        self._admit_fn = None         # cached jitted slot writer
+        self._prefill_jits = {}       # prompt_len -> jitted batch-1 prefill
+        self._tap_sink = None         # per-run host consumer of tap rows
+
+    # ---- shardings ---------------------------------------------------------
+    def param_shardings(self):
+        return tree_shardings(M.param_specs(self.cfg), self.mesh, self.rules)
+
+    def state_shardings(self):
+        S = self.slots.n_slots
+        cache_sh = tree_shardings(
+            M.cache_specs(self.cfg, S, self.slots.ctx_len, ragged=True),
+            self.mesh, self.rules)
+        lane = NamedSharding(self.mesh, P(self.rules.data_axes[-1]
+                                          if S > 1 else None))
+        repl = NamedSharding(self.mesh, P())
+        return {"cache": cache_sh, "toks": lane, "pos": lane,
+                "active": lane, "remaining": lane, "key": repl}
+
+    # ---- state -------------------------------------------------------------
+    def init_state(self) -> dict:
+        """All slots empty: inactive lanes decode-and-discard until a
+        request is admitted (their writes are idempotent)."""
+        S = self.slots.n_slots
+        state = {
+            "cache": M.init_cache(self.cfg, S, self.slots.ctx_len,
+                                  ragged=True),
+            "toks": jnp.zeros((S,), jnp.int32),
+            "pos": jnp.zeros((S,), jnp.int32),
+            "active": jnp.zeros((S,), bool),
+            "remaining": jnp.zeros((S,), jnp.int32),
+            "key": jax.random.PRNGKey(self.slots.seed),
+        }
+        # pin the canonical shardings up front: every producer of a state
+        # tree (init / admit / chunk) must agree, or the jits re-specialise
+        # on their first post-admission call
+        return jax.device_put(state, self.state_shardings())
+
+    # ---- tap ---------------------------------------------------------------
+    def _emit_tap(self, idx, toks, active):
+        """Host side of the ordered io_callback (bound once so the chunk
+        program stays stable; the per-run consumer swaps in via
+        ``_tap_sink``)."""
+        sink = self._tap_sink
+        if sink is not None:
+            sink(int(idx), np.asarray(toks), np.asarray(active))
+
+    # ---- compiled programs -------------------------------------------------
+    def chunk_fn(self):
+        """Jitted ``chunk(params, state, idx0) -> state``: K ragged decode
+        steps with per-step tap emission.  Compiled once; ``idx0`` is a
+        traced scalar so chunk position never retraces."""
+        if self._chunk_fn is not None:
+            return self._chunk_fn
+        from jax.experimental import io_callback
+
+        cfg, ctx = self.cfg, self.slots.ctx_len
+        temp, K = self.slots.temperature, self.slots.steps_per_launch
+        emit = self._emit_tap
+
+        def decode(params, cache, toks, pos):
+            return M.decode_step(cfg, params, cache, toks, pos, ctx)
+
+        decode = sharded_trace(decode, self.mesh, self.rules)
+
+        def chunk(params, state, idx0):
+            def round_fn(st, idx):
+                logits, cache = decode(params, st["cache"], st["toks"],
+                                       st["pos"])
+                act = st["active"]
+                key = st["key"]
+                if temp > 0:
+                    key, sub = jax.random.split(key)
+                    nxt = jax.random.categorical(
+                        sub, logits / temp, axis=-1).astype(jnp.int32)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                step = act.astype(jnp.int32)
+                toks = jnp.where(act, nxt, st["toks"])
+                rem = st["remaining"] - step
+                # ordered: per-request consumers see tokens in decode order
+                io_callback(emit, None, idx, toks, act, ordered=True)
+                return {"cache": cache, "toks": toks,
+                        "pos": st["pos"] + step,
+                        "active": act & (rem > 0), "remaining": rem,
+                        "key": key}, None
+
+            state, _ = jax.lax.scan(
+                round_fn, state, idx0 + jnp.arange(K, dtype=jnp.int32))
+            return state
+
+        self._chunk_fn = jax.jit(
+            chunk,
+            in_shardings=(self.param_shardings(), self.state_shardings(),
+                          NamedSharding(self.mesh, P())),
+            out_shardings=self.state_shardings(),
+            donate_argnums=(1,))
+        return self._chunk_fn
+
+    def admit_fn(self):
+        """Jitted ``admit(state, pcache, slot, tok0, pos0, rem0)``: write a
+        prefilled request into slot ``slot`` (a TRACED index — one compile
+        covers every admission into any slot)."""
+        if self._admit_fn is not None:
+            return self._admit_fn
+
+        def admit(state, pcache, slot, tok0, pos0, rem0):
+            def wr(c, p):
+                if c.ndim == p.ndim + 1:      # per-slot positions row
+                    return jax.lax.dynamic_update_slice(
+                        c, p[None].astype(c.dtype), (slot, 0))
+                # every other leaf: (layers, batch=n_slots, ...) ← batch-1 row
+                start = (0, slot) + (0,) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(c, p.astype(c.dtype),
+                                                    start)
+
+            return {
+                "cache": jax.tree_util.tree_map(wr, state["cache"], pcache),
+                "toks": state["toks"].at[slot].set(tok0),
+                "pos": state["pos"].at[slot].set(pos0),
+                "active": state["active"].at[slot].set(rem0 > 0),
+                "remaining": state["remaining"].at[slot].set(rem0),
+                "key": state["key"],
+            }
+
+        self._admit_fn = jax.jit(admit, out_shardings=self.state_shardings(),
+                                 donate_argnums=(0,))
+        return self._admit_fn
+
+    def prefill_fn(self, prompt_len: int):
+        """Jitted batch-1 prefill → (first token (1,), ctx-length cache);
+        cached per prompt length."""
+        fn = self._prefill_jits.get(prompt_len)
+        if fn is None:
+            cfg, ctx = self.cfg, self.slots.ctx_len
+
+            def pf(params, tokens):
+                logits, cache = M.prefill(cfg, params, {"tokens": tokens},
+                                          ctx_len=ctx)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+            fn = jax.jit(pf)
+            self._prefill_jits[prompt_len] = fn
+        return fn
+
+    def compile_counts(self) -> dict:
+        """Traced-signature counts of the cached jits (the no-retrace
+        gate: rotating requests through freed slots must keep these at 1
+        per program)."""
+        out = {}
+        if self._chunk_fn is not None:
+            out["chunk"] = self._chunk_fn._cache_size()
+        if self._admit_fn is not None:
+            out["admit"] = self._admit_fn._cache_size()
+        for plen, fn in self._prefill_jits.items():
+            out[f"prefill[{plen}]"] = fn._cache_size()
+        return out
+
+    # ---- driver ------------------------------------------------------------
+    def serve(self, params, prompts: np.ndarray, max_new: int, *,
+              admission: Union[str, AdmissionPolicy] = "pure",
+              arrivals: Optional[np.ndarray] = None,
+              on_token: Optional[Callable] = None) -> ServeResult:
+        """Serve every prompt to its ``max_new``-token budget.
+
+        prompts: (n_requests, prompt_len) int32; ``arrivals``: optional
+        (n_requests,) arrival steps on the decode-step clock (see
+        :func:`~repro.distributed.admission.draw_arrivals`); ``admission``:
+        a policy name/compact spec or a prepared :class:`AdmissionPolicy`;
+        ``on_token(rid, token, step)`` fires per streamed token from the
+        tap thread (token already a host int).
+
+        The loop is steered entirely by host bookkeeping: completions are
+        deterministic (``admit_step + max_new − 1``), so no device value is
+        ever read to decide admission — only the final token matrix is
+        assembled from the tap stream.
+        """
+        S, K = self.slots.n_slots, self.slots.steps_per_launch
+        n_req, plen = prompts.shape
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if plen + max_new > self.slots.ctx_len:
+            raise ValueError(
+                f"prompt_len + max_new = {plen + max_new} exceeds "
+                f"ctx_len = {self.slots.ctx_len}")
+        if isinstance(admission, AdmissionPolicy):
+            policy = admission
+        else:
+            name, b = parse_admission(admission)
+            policy = AdmissionPolicy(name, n_req, b=b,
+                                     seed=self.slots.seed)
+        arr = (np.zeros(n_req, np.int64) if arrivals is None
+               else np.asarray(arrivals, np.int64))
+        if arr.shape != (n_req,):
+            raise ValueError(f"arrivals must be ({n_req},); got {arr.shape}")
+
+        chunk = self.chunk_fn()
+        admit = self.admit_fn()
+        pf = self.prefill_fn(plen)
+        prompts_dev = jnp.asarray(prompts, jnp.int32)
+
+        trace = AdmissionTrace(n_req, wait_b=policy.wait_b)
+        state = self.init_state()
+        slot_rid = [-1] * S
+        fin: dict = {}                # rid -> completion step
+        admit_t: dict = {}            # rid -> admission step
+        outputs: dict = {}            # rid -> [tok0_dev, host ints...]
+        step_maps: dict = {}          # chunk start -> slot_rid snapshot
+        tap_stats = {"rows": 0}
+        mismatches: list = []
+
+        def sink(idx, toks, act):
+            tap_stats["rows"] += 1
+            m = step_maps.get(idx - idx % K)
+            if m is None:
+                mismatches.append(f"step {idx}: no chunk snapshot")
+                return
+            for s, rid in enumerate(m):
+                predicted = rid >= 0 and (idx - admit_t[rid]) < max_new - 1
+                if bool(act[s]) != predicted:
+                    mismatches.append(
+                        f"step {idx} slot {s}: device active={bool(act[s])} "
+                        f"!= host-predicted {predicted}")
+                    continue
+                if predicted:
+                    tok = int(toks[s])
+                    outputs[rid].append(tok)
+                    if on_token is not None:
+                        on_token(rid, tok, int(idx))
+
+        t, chunks, in_flight, done = 0, 0, 0, 0
+        busy_steps = 0
+        horizon = 2 * (int(arr.max(initial=0)) + n_req * max_new + K) + 4 * K
+        self._tap_sink = sink
+        try:
+            while done < n_req:
+                if t > horizon:
+                    raise RuntimeError(
+                        f"slot loop passed its horizon ({horizon} steps) "
+                        f"with {n_req - done} requests unfinished — "
+                        "admission bookkeeping is stuck")
+                # -- completions (deterministic, no readback) --------------
+                freed = sorted(
+                    (s for s in range(S)
+                     if slot_rid[s] >= 0 and fin[slot_rid[s]] <= t),
+                    key=lambda s: (fin[slot_rid[s]], s))
+                for s in freed:
+                    rid, slot_rid[s] = slot_rid[s], -1
+                    in_flight -= 1
+                    trace.completed(rid, s, fin[rid], in_flight + 1)
+                    policy.notify_completion(rid)
+                    done += 1
+                # -- admissions into free slots ----------------------------
+                arrived = {r for r in range(n_req) if arr[r] <= t}
+                free = [s for s in range(S) if slot_rid[s] < 0]
+                while free:
+                    rid = policy.pick(arrived, in_flight)
+                    if rid is None:
+                        break
+                    s = free[0]
+                    tok0, pcache = pf(params, prompts_dev[rid:rid + 1])
+                    state = admit(state, pcache, s, tok0[0],
+                                  jnp.int32(plen), jnp.int32(max_new - 1))
+                    outputs[rid] = [tok0]
+                    admit_t[rid] = t
+                    fin[rid] = t + max_new - 1
+                    trace.admitted(rid, t)
+                    if max_new == 1:      # completes at admission
+                        trace.completed(rid, s, t, in_flight + 1)
+                        policy.notify_completion(rid)
+                        done += 1
+                    else:
+                        slot_rid[s] = rid
+                        in_flight += 1
+                        free.pop(0)
+                if done >= n_req:
+                    break
+                if in_flight == 0:
+                    # idle pool, pending arrivals: fast-forward the clock
+                    # to the next chunk boundary at/after the earliest
+                    # arrival — no launch for empty air
+                    nxt = min(arr[r] for r in range(n_req)
+                              if r not in admit_t)
+                    t = max(t + K, -(-int(nxt) // K) * K)
+                    continue
+                # -- one chunk launch --------------------------------------
+                step_maps[t] = list(slot_rid)
+                for s in range(S):
+                    rid = slot_rid[s]
+                    if rid >= 0:
+                        busy_steps += max(0, min(t + K, fin[rid]) - t)
+                state = chunk(params, state, jnp.int32(t))
+                chunks += 1
+                t += K
+            state = jax.block_until_ready(state)
+            jax.effects_barrier()
+        finally:
+            self._tap_sink = None
+
+        if mismatches:
+            raise RuntimeError(
+                "device masks diverged from host bookkeeping:\n  "
+                + "\n  ".join(mismatches[:10]))
+        if tap_stats["rows"] != chunks * K:
+            raise RuntimeError(
+                f"serve tap delivered {tap_stats['rows']}/{chunks * K} "
+                "rows — an io_callback was dropped or the run was "
+                "interrupted mid-chunk")
+
+        toks = np.empty((n_req, max_new), np.int32)
+        for rid in range(n_req):
+            row = outputs[rid]
+            row[0] = int(np.asarray(row[0])[0])       # deferred tok0 read
+            if len(row) != max_new:
+                raise RuntimeError(
+                    f"request {rid} streamed {len(row)}/{max_new} tokens")
+            toks[rid] = row
+        ttft = np.array([admit_t[r] - arr[r] for r in range(n_req)],
+                        np.int64)
+        occ = busy_steps / (chunks * K * S) if chunks else 0.0
+        return ServeResult(tokens=toks, schedule=trace.schedule(),
+                           ttft_steps=ttft, occupancy=float(occ),
+                           decode_steps=chunks * K, chunks=chunks,
+                           tap_rows=tap_stats["rows"])

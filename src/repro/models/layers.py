@@ -126,16 +126,28 @@ def decode_attention(q, k_cache, v_cache, cache_positions, pos,
     absolute position stored in each slot (−1 = empty); pos: scalar int32 of
     the current token.  The current token's own k/v must already be written.
 
+    Ragged (slot-server) variant: ``pos`` is (B,) and ``cache_positions`` is
+    (B, W) — each batch row decodes at its own absolute position, so the
+    validity mask is per-row.  The scalar path's op sequence is unchanged
+    (the bias broadcasts identically), keeping lock-step decoding
+    bit-for-bit what it was.
+
     The score tensor is constrained to keep the cache's ctx sharding so
     GSPMD computes a *distributed* softmax (partial max/sum + small
     all-reduce) instead of all-gathering the cache (flash-decode pattern).
     """
     from ..distributed.sharding import shard_activation
 
-    valid = (cache_positions >= 0) & (cache_positions <= pos)
-    if window is not None:
-        valid &= cache_positions > pos - window
-    bias = jnp.where(valid, 0.0, NEG_INF).astype(F32)[None, :]   # (1=Sq, W)
+    if jnp.ndim(pos) == 1:                            # ragged: per-row pos
+        valid = (cache_positions >= 0) & (cache_positions <= pos[:, None])
+        if window is not None:
+            valid &= cache_positions > (pos[:, None] - window)
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(F32)[:, None]  # (B,1=Sq,W)
+    else:
+        valid = (cache_positions >= 0) & (cache_positions <= pos)
+        if window is not None:
+            valid &= cache_positions > pos - window
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(F32)[None, None]  # (1,1=Sq,W)
 
     B, Sq, H, D = q.shape
     KV = k_cache.shape[2]
@@ -143,7 +155,7 @@ def decode_attention(q, k_cache, v_cache, cache_positions, pos,
     qr = q.reshape(B, Sq, KV, G, D)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qr, k_cache,
                         preferred_element_type=F32) / np.sqrt(D)
-    scores = scores + bias[None, None, None]
+    scores = scores + bias[:, None, None]             # (B|1,1,1,Sq,W)
     scores = shard_activation(
         scores, ("batch", "kv_heads", None, None, "ctx"))
     m = jnp.max(scores, axis=-1, keepdims=True)

@@ -537,11 +537,20 @@ def prefill(cfg: ArchConfig, params, batch, ctx_len: Optional[int] = None):
 # decode (serve_step)
 # ============================================================================
 
-def cache_specs(cfg: ArchConfig, batch: int, ctx_len: int) -> dict:
-    """Cache tree as Specs (shapes + logical axes) — feeds input_specs()."""
+def cache_specs(cfg: ArchConfig, batch: int, ctx_len: int, *,
+                ragged: bool = False) -> dict:
+    """Cache tree as Specs (shapes + logical axes) — feeds input_specs().
+
+    ``ragged=True`` declares the slot-server cache: the positions buffer
+    grows a per-row batch axis ((batch, W) instead of the shared (W,)) so
+    each slot tracks its own absolute position.  Every other leaf already
+    carries a batch axis and is unchanged.
+    """
     W = min(cfg.sliding_window or ctx_len, ctx_len)
     KV, Dh, nl = cfg.n_kv_heads, cfg.d_head, cfg.n_layers
     dt = cfg.dtype
+    pos_spec = (Spec((batch, W), ("batch", "ctx"), "zeros", "int32")
+                if ragged else Spec((W,), ("ctx",), "zeros", "int32"))
 
     def ring(lyrs):
         return {
@@ -564,7 +573,7 @@ def cache_specs(cfg: ArchConfig, batch: int, ctx_len: int) -> dict:
     c: dict = {}
     if cfg.family in ("dense", "vlm", "moe"):
         c["self"] = ring(nl)
-        c["positions"] = Spec((W,), ("ctx",), "zeros", "int32")
+        c["positions"] = pos_spec
     elif cfg.family == "ssm":
         c["ssm"] = ssm_states(nl)
     elif cfg.family == "hybrid":
@@ -574,10 +583,10 @@ def cache_specs(cfg: ArchConfig, batch: int, ctx_len: int) -> dict:
         if rem:
             c["ssm_tail"] = ssm_states(rem)
         c["attn"] = ring(g)
-        c["positions"] = Spec((W,), ("ctx",), "zeros", "int32")
+        c["positions"] = pos_spec
     elif cfg.family == "audio":
         c["self"] = ring(nl)
-        c["positions"] = Spec((W,), ("ctx",), "zeros", "int32")
+        c["positions"] = pos_spec
         c["cross_k"] = Spec((nl, batch, ctx_len, KV, Dh),
                             ("layers", "batch", "ctx", "kv_heads", "head"),
                             "zeros", dt)
@@ -587,15 +596,23 @@ def cache_specs(cfg: ArchConfig, batch: int, ctx_len: int) -> dict:
     return c
 
 
-def init_cache(cfg: ArchConfig, batch: int, ctx_len: int) -> dict:
-    tree = init_tree(cache_specs(cfg, batch, ctx_len), jax.random.PRNGKey(0))
+def init_cache(cfg: ArchConfig, batch: int, ctx_len: int, *,
+               ragged: bool = False) -> dict:
+    tree = init_tree(cache_specs(cfg, batch, ctx_len, ragged=ragged),
+                     jax.random.PRNGKey(0))
     if "positions" in tree:
         tree["positions"] = tree["positions"] - 1   # −1 = empty slot
     return tree
 
 
 def _decode_attn(cfg, p, h, kc, vc, cache_positions, pos, window, slot):
-    """One-token attention; returns (h', new_k_slice, new_v_slice)."""
+    """One-token attention; returns (h', new_k_slice, new_v_slice).
+
+    ``pos``/``slot`` scalar: lock-step decoding (all rows share one
+    position).  ``pos``/``slot`` (B,): ragged decoding — each row carries
+    its own position, writes its own ring slot, and ``cache_positions`` is
+    the per-row (B, W) buffer.
+    """
     x = L.rms_norm(h, p["norm"], cfg.norm_eps)
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
@@ -605,11 +622,17 @@ def _decode_attn(cfg, p, h, kc, vc, cache_positions, pos, window, slot):
     if cfg.qk_norm:
         q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
-    posv = jnp.full((1,), pos)
+    ragged = jnp.ndim(pos) == 1
+    posv = pos[:, None] if ragged else jnp.full((1,), pos)
     q = L.rope(q, posv, cfg.rope_theta)
     k = L.rope(k, posv, cfg.rope_theta)
-    kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+    if ragged:
+        rows = jnp.arange(kc.shape[0])
+        kc = kc.at[rows, slot].set(k[:, 0])
+        vc = vc.at[rows, slot].set(v[:, 0])
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
     o = L.decode_attention(q, kc, vc, cache_positions, pos, window=window)
     return h + jnp.einsum("bshk,hkd->bsd", o, p["wo"]), kc, vc
 
@@ -643,18 +666,29 @@ def _decode_mamba(cfg, p, h, conv_state, ssd_state):
 def decode_step(cfg: ArchConfig, params, cache, tokens, pos, ctx_len: int):
     """serve_step: ONE new token per sequence against the cache.
 
-    tokens: (B,) int32; pos: scalar int32 (current absolute position).
+    tokens: (B,) int32; pos: scalar int32 (current absolute position) for
+    lock-step decoding, or (B,) int32 per-row positions for ragged
+    (slot-server) decoding against a cache built with
+    ``cache_specs(..., ragged=True)`` — the positions buffer is then
+    (B, W) and every row writes its own ring slot.
     Returns (logits (B, V), new_cache).
     """
     W = min(cfg.sliding_window or ctx_len, ctx_len)
     window = cfg.sliding_window
+    ragged = jnp.ndim(pos) == 1
     slot = jnp.mod(pos, W)
     h = _embed(cfg, params, tokens[:, None])          # (B,1,d)
     cache = dict(cache)
 
     if "positions" in cache:
-        cache["positions"] = jax.lax.dynamic_update_index_in_dim(
-            cache["positions"], pos.astype(cache["positions"].dtype), slot, axis=0)
+        if ragged:
+            rows = jnp.arange(tokens.shape[0])
+            cache["positions"] = cache["positions"].at[rows, slot].set(
+                pos.astype(cache["positions"].dtype))
+        else:
+            cache["positions"] = jax.lax.dynamic_update_index_in_dim(
+                cache["positions"], pos.astype(cache["positions"].dtype),
+                slot, axis=0)
         cpos = cache["positions"]
 
     fam = cfg.family

@@ -285,14 +285,14 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
                 [avail, np.ones((R - avail.shape[0], avail.shape[1]),
                                 np.float32)])
         masks = masks * avail[:R]
+    cfg = job.make_arch()          # built once: vocab probe + pipeline share it
     cdf_bank = cdf_index = None
     if zipf_as is not None:
         z = np.asarray(zipf_as, dtype=np.float64)
         if z.shape[0] < R:
             z = np.concatenate([z, np.full(R - z.shape[0], z[-1])])
-        cfg_probe = job.make_arch()
         cdf_bank, cdf_index = quantize_zipf_trajectory(
-            z[:R], cfg_probe.vocab, n_cdf_phases)
+            z[:R], cfg.vocab, n_cdf_phases)
     density = None
     if grad_density is not None:
         density = np.asarray(grad_density, dtype=np.float32)
@@ -308,7 +308,6 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
         base = np.float32(base_gamma if base_gamma is not None else g[0])
         grid_scales = ((g / base)[:, None]
                        * scales[None, :]).astype(np.float32)
-    cfg = job.make_arch()
     pipe = HeterogeneousTokenPipeline(DataConfig(
         vocab=cfg.vocab, seq_len=job.seq_len, global_batch=job.global_batch,
         n_groups=n, heterogeneity=job.heterogeneity, seed=seed))

@@ -1,0 +1,144 @@
+"""Unit coverage for the benchmarks/check_perf.py CI gate.
+
+The regression under test: a baseline row carrying ``grid_speedup`` whose
+*current* row lacks the field used to read ``cur.get("grid_speedup",
+0.0)`` and fail with a bogus ``0.000 < floor`` REGRESSION verdict — the
+failure message must say the FIELD is missing, not that throughput
+dropped to zero.  Plus the ``serve_slots`` kind's compare path and the
+kind-dispatch rules.
+"""
+import importlib.util
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCRIPT = ROOT / "benchmarks" / "check_perf.py"
+
+_spec = importlib.util.spec_from_file_location("check_perf", SCRIPT)
+check_perf = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_perf)
+
+
+def _runtime_payload(*, grid_speedup=None, rounds_per_s=100.0):
+    entry = {"runtime": "scan", "metrics": "chunk", "rounds_per_launch": 8,
+             "rounds_per_s": rounds_per_s}
+    if grid_speedup is not None:
+        entry["grid_speedup"] = grid_speedup
+    return {"bench": "runtime_dispatch_ab",
+            "entries": [{"runtime": "eager", "metrics": "chunk",
+                         "rounds_per_launch": 1, "rounds_per_s": 50.0},
+                        entry]}
+
+
+def _serve_payload(*, tok_per_s=40.0, occupancy=0.9, lock=100.0):
+    return {"bench": "serve_slots",
+            "entries": [{"mode": "lockstep", "tok_per_s": lock},
+                        {"mode": "rotating", "n_slots": 2,
+                         "admission": "pure", "tok_per_s": tok_per_s,
+                         "occupancy": occupancy}]}
+
+
+# ---------------------------------------------------------------------------
+# the missing-field regression (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_missing_grid_speedup_reports_missing_not_zero(capsys):
+    base = _runtime_payload(grid_speedup=3.0)
+    cur = _runtime_payload()                 # field vanished from current
+    failures = check_perf.check_runtime(cur, base, tolerance=0.3)
+    assert len(failures) == 1
+    assert "lacks the field" in failures[0]
+    # the old bug compared 0.0 against the floor and printed "0.000 <"
+    assert "0.000" not in failures[0]
+    assert "MISSING" in capsys.readouterr().out
+
+
+def test_present_grid_speedup_still_gated():
+    base = _runtime_payload(grid_speedup=3.0)
+    ok = check_perf.check_runtime(_runtime_payload(grid_speedup=2.9),
+                                  base, tolerance=0.3)
+    assert ok == []
+    bad = check_perf.check_runtime(_runtime_payload(grid_speedup=1.0),
+                                   base, tolerance=0.3)
+    assert len(bad) == 1 and "grid_speedup" in bad[0]
+
+
+def test_rows_returns_rows_and_eager_tuple():
+    rows, eager = check_perf._rows(_runtime_payload())
+    assert eager == 50.0
+    assert ("scan", "chunk", 8) in rows
+
+
+# ---------------------------------------------------------------------------
+# the serve_slots kind
+# ---------------------------------------------------------------------------
+
+def test_serve_kind_passes_identical_payloads():
+    assert check_perf.check_serve(_serve_payload(), _serve_payload(),
+                                  tolerance=0.3) == []
+
+
+def test_serve_kind_normalises_by_lockstep_row():
+    base = _serve_payload(tok_per_s=40.0, lock=100.0)
+    # half the absolute speed but the same RATIO: a slower machine, not a
+    # regression
+    cur = _serve_payload(tok_per_s=20.0, lock=50.0)
+    assert check_perf.check_serve(cur, base, tolerance=0.3) == []
+    # ratio collapse IS a regression
+    bad = _serve_payload(tok_per_s=10.0, lock=100.0)
+    fails = check_perf.check_serve(bad, base, tolerance=0.3)
+    assert len(fails) == 1 and "tok/s" in fails[0]
+
+
+def test_serve_kind_gates_occupancy_and_missing_fields():
+    base = _serve_payload(occupancy=0.9)
+    fails = check_perf.check_serve(_serve_payload(occupancy=0.3), base,
+                                   tolerance=0.3)
+    assert len(fails) == 1 and "occupancy" in fails[0]
+    cur = _serve_payload()
+    del cur["entries"][1]["occupancy"]
+    fails = check_perf.check_serve(cur, base, tolerance=0.3)
+    assert len(fails) == 1 and "lacks the field" in fails[0]
+
+
+# ---------------------------------------------------------------------------
+# kind dispatch through main()
+# ---------------------------------------------------------------------------
+
+def _run_main(tmp_path, cur, base, extra=()):
+    cur_p, base_p = tmp_path / "cur.json", tmp_path / "base.json"
+    cur_p.write_text(json.dumps(cur))
+    base_p.write_text(json.dumps(base))
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), str(cur_p), str(base_p), *extra],
+        capture_output=True, text=True)
+
+
+def test_main_accepts_serve_payload(tmp_path):
+    r = _run_main(tmp_path, _serve_payload(), _serve_payload())
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no dispatch-layer regression" in r.stdout
+
+
+def test_main_skips_unknown_kind(tmp_path):
+    r = _run_main(tmp_path, {"bench": "scenarios", "entries": []},
+                  _serve_payload())
+    assert r.returncode == 0
+    assert "SKIP" in r.stdout
+
+
+def test_main_rejects_kind_mismatch(tmp_path):
+    r = _run_main(tmp_path, _serve_payload(), _runtime_payload())
+    assert r.returncode != 0
+    assert "mismatch" in r.stdout + r.stderr
+
+
+def test_main_fails_on_serve_regression(tmp_path):
+    r = _run_main(tmp_path, _serve_payload(tok_per_s=10.0),
+                  _serve_payload(tok_per_s=40.0))
+    assert r.returncode == 1
+    assert "PERF REGRESSION" in r.stdout

@@ -123,6 +123,25 @@ def test_lower_rounds_matches_components():
         scales, round_delay_scales(schedule, 10, delay_rounds=1))
 
 
+def test_compile_plan_builds_arch_once():
+    """Regression: with zipf_as set, compile_plan used to call
+    job.make_arch() twice (once for the vocab probe, once for the
+    pipeline config) — the probe must reuse the single build."""
+    calls = []
+
+    class CountingJob(TrainJob):
+        def make_arch(self):
+            calls.append(1)
+            return super().make_arch()
+
+    job = CountingJob(arch_overrides=MICRO)
+    spec = _spec(job, T=5)
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    compile_plan(schedule, job, rounds=5, n_groups=4, seed=0,
+                 zipf_as=np.full(5, 1.2))
+    assert len(calls) == 1, f"make_arch called {len(calls)} times"
+
+
 def test_compile_plan_shapes_and_validation():
     job = _job()
     spec = _spec(job, T=7)

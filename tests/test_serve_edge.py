@@ -87,6 +87,65 @@ def test_serve_backend_batch_of_one():
     assert res.x.shape == (1, 3)
 
 
+def test_generate_compiles_once_across_calls():
+    """Regression: jit_serve_step used to build a FRESH jax.jit wrapper per
+    generate call, so every call retraced and recompiled the step.  The
+    wrapper must now be cached on the instance, and a second generate must
+    add ZERO backend compiles and ZERO traced signatures."""
+    from jax import monitoring
+
+    cfg, srv, params = _server(batch=2)
+    compiles = []
+
+    def listener(event, duration, **kw):
+        if event == "/jax/core/compile/backend_compile_duration":
+            compiles.append(event)
+
+    monitoring.register_event_duration_secs_listener(listener)
+    try:
+        prompts = np.array([3, 5], dtype=np.int32)
+        srv.generate(params, prompts, 3)
+        assert srv.jit_serve_step() is srv.jit_serve_step()
+        n_compiles = len(compiles)
+        n_traces = srv.jit_serve_step()._cache_size()
+        srv.generate(params, prompts, 3)
+        assert len(compiles) == n_compiles, \
+            "second generate() recompiled the serve step"
+        assert srv.jit_serve_step()._cache_size() == n_traces, \
+            "second generate() retraced the serve step"
+    finally:
+        monitoring.clear_event_listeners()
+
+
+def test_generate_threads_sampling_key_across_calls():
+    """Regression: generate used to rebuild PRNGKey(seed) per call, so
+    successive temperature-sampled calls replayed the SAME stream."""
+    cfg, srv, params = _server(batch=2, temperature=1.0)
+    prompts = np.array([3, 5], dtype=np.int32)
+    a = srv.generate(params, prompts, 6)
+    b = srv.generate(params, prompts, 6)
+    assert not np.array_equal(a, b), \
+        "two consecutive sampled calls replayed the same PRNG stream"
+
+
+def test_generate_explicit_key_reproduces_without_consuming_stream():
+    """A caller-supplied key gives reproducible draws and must not disturb
+    the server's persistent stream."""
+    cfg, srv, params = _server(batch=2, temperature=1.0)
+    prompts = np.array([3, 5], dtype=np.int32)
+    first = srv.generate(params, prompts, 4)
+    k = jax.random.PRNGKey(7)
+    e1 = srv.generate(params, prompts, 4, key=k)
+    e2 = srv.generate(params, prompts, 4, key=k)
+    np.testing.assert_array_equal(e1, e2)
+    second = srv.generate(params, prompts, 4)
+    # an identical fresh server draws the same first-then-second streams,
+    # proving the explicit-key calls consumed nothing from the instance
+    _, srv2, _ = _server(batch=2, temperature=1.0)
+    np.testing.assert_array_equal(first, srv2.generate(params, prompts, 4))
+    np.testing.assert_array_equal(second, srv2.generate(params, prompts, 4))
+
+
 def test_serve_backend_rejects_wrong_objective():
     with pytest.raises(TypeError, match="ServeJob"):
         ServeBackend(mesh=_mesh()).run(
