@@ -158,10 +158,58 @@ def check_serve(current: dict, baseline: dict, tolerance: float) -> list:
     return failures
 
 
+def check_faults(current: dict, baseline: dict, tolerance: float) -> list:
+    """Fault-injection gate: the ceiling is ABSOLUTE, not baseline-relative.
+
+    The payload's ``guard_overhead_ratio`` (guarded / unguarded rounds/s
+    on the same plan, state and machine) is already machine-portable, and
+    the guard's documented contract is a ≤10% overhead ceiling — so CI
+    passes ``--tolerance 0.1`` and the gate fails when the CURRENT ratio
+    drops below ``1 − tolerance``, regardless of what the committed
+    baseline measured.  The two smoke flags are gated the same way: the
+    unguarded run must actually end poisoned (else the fault channel went
+    dead and the overhead number is meaningless) and the guarded run must
+    end finite with every poisoned round skipped."""
+    failures = []
+    ratio = float(current["guard_overhead_ratio"])
+    floor = 1.0 - tolerance
+    base_ratio = float(baseline.get("guard_overhead_ratio", 0.0))
+    print(f"{'guard_overhead_ratio':<28} {base_ratio:>8.3f} {ratio:>8.3f} "
+          f"{floor:>8.3f}  {'ok' if ratio >= floor else 'REGRESSION'}")
+    if ratio < floor:
+        failures.append(
+            f"guard_overhead_ratio {ratio:.3f} < floor {floor:.3f} — the "
+            f"guard costs more than {tolerance:.0%} of unguarded scan "
+            "throughput")
+    for flag, why in (
+            ("unguarded_poisoned",
+             "the injected faults no longer poison an unguarded run — the "
+             "fault channel is dead end-to-end"),
+            ("guarded_final_finite",
+             "the guard let non-finite values reach the final params")):
+        ok = bool(current.get(flag, False))
+        print(f"{flag:<28} {'':>8} {str(ok):>8} {'True':>8}  "
+              f"{'ok' if ok else 'FAILED'}")
+        if not ok:
+            failures.append(f"{flag} is False: {why}")
+    skipped = int(current.get("guarded_skipped_rounds", -1))
+    poisoned = int(current.get("poisoned_rounds", -2))
+    ok = skipped == poisoned and poisoned > 0
+    print(f"{'skipped == poisoned':<28} {'':>8} {skipped:>8} {poisoned:>8}  "
+          f"{'ok' if ok else 'FAILED'}")
+    if not ok:
+        failures.append(
+            f"guarded run skipped {skipped} rounds but the plan poisons "
+            f"{poisoned} participating rounds — the guard is skipping the "
+            "wrong rounds (or the world realised no faults)")
+    return failures
+
+
 #: bench kinds this gate knows how to compare (payload "bench" field)
 CHECKERS = {
     "runtime_dispatch_ab": check_runtime,
     "serve_slots": check_serve,
+    "faults": check_faults,
 }
 KNOWN_KINDS = set(CHECKERS)
 

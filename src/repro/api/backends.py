@@ -120,6 +120,14 @@ class TrainerBackend:
     :meth:`repro.runtime.PlanExecutor.run_grid`) — one trainer, one
     compile, shared masks/batches — instead of N sequential runs; the
     eager runtime keeps the sequential loop as the oracle.
+
+    Fault tolerance rides the same lanes: a ``fault:`` scenario lowers
+    its per-round gain channel into the plan, ``TrainJob(guards=True)``
+    arms the trainer's non-finite guard rails, ``snapshot`` (an
+    :class:`repro.checkpoint.AsyncSnapshotter`) gives scan runs
+    barrier-free periodic checkpoints and ``breaker`` (a
+    :class:`repro.faults.DivergenceBreaker`, ``metrics="tap"`` only)
+    stops launching chunks once the loss diverges.
     """
 
     name = "trainer"
@@ -130,13 +138,16 @@ class TrainerBackend:
                  on_step: Optional[Callable] = None,
                  runtime: Optional[str] = None,
                  rounds_per_launch: Optional[int] = None,
-                 metrics: Optional[str] = None):
+                 metrics: Optional[str] = None,
+                 snapshot=None, breaker=None):
         self.mesh = mesh
         self.rules = rules
         self.on_step = on_step
         self.runtime = runtime
         self.rounds_per_launch = rounds_per_launch
         self.metrics = metrics
+        self.snapshot = snapshot
+        self.breaker = breaker
 
     # ---- pieces shared with tests -----------------------------------------
     @staticmethod
@@ -194,6 +205,7 @@ class TrainerBackend:
     def _make_trainer(self, spec: ExperimentSpec, job: TrainJob, lr: float,
                       adaptive: bool):
         from ..distributed import AsyncTrainer, AsyncConfig, DEFAULT_RULES
+        from ..faults import GuardConfig
         from ..launch.mesh import make_host_mesh
         from ..optim import OptConfig
 
@@ -206,7 +218,9 @@ class TrainerBackend:
                           update_impl=job.update_impl),
             async_cfg=AsyncConfig(delay_rounds=job.delay_rounds,
                                   delay_adaptive=adaptive,
-                                  microbatches=job.microbatches),
+                                  microbatches=job.microbatches,
+                                  guards=GuardConfig() if job.guards
+                                  else None),
             rules=rules)
         n_groups = spec.n_workers or tr.n_groups
         tr.n_groups = n_groups
@@ -244,13 +258,17 @@ class TrainerBackend:
                             seed=spec.seed, adaptive=adaptive,
                             availability=world.availability,
                             zipf_as=world.zipf_as,
-                            grad_density=world.grad_density)
+                            grad_density=world.grad_density,
+                            fault_gain=world.fault_gain)
         runtime, rounds_per_launch, metrics = self.resolve_runtime(spec)
         if metrics == "none" and metrics_floor is not None:
             metrics = metrics_floor
+        kw = {}
+        if runtime == "scan":           # durability/breaker: scan-only lanes
+            kw = {"snapshot": self.snapshot, "breaker": self.breaker}
         exec_res = execute(tr, plan, state, runtime=runtime,
                            rounds_per_launch=rounds_per_launch,
-                           metrics=metrics, on_step=self.on_step)
+                           metrics=metrics, on_step=self.on_step, **kw)
 
         have_curves = bool(exec_res.metrics)
         return RunResult(
@@ -273,7 +291,9 @@ class TrainerBackend:
                    "metrics_mode": metrics if runtime == "scan" else "chunk",
                    "launches": exec_res.launches,
                    "host_syncs": exec_res.host_syncs,
-                   "tap_events": exec_res.tap_events})
+                   "tap_events": exec_res.tap_events,
+                   "snapshots": exec_res.stats.snapshots,
+                   "tripped_round": exec_res.stats.tripped_round})
 
     def _run_grid(self, spec: ExperimentSpec, job: TrainJob) -> RunResult:
         """All grid γ points in one vmapped scan program (the plan's
@@ -296,7 +316,8 @@ class TrainerBackend:
                             seed=spec.seed, grid_gammas=gammas,
                             availability=world.availability,
                             zipf_as=world.zipf_as,
-                            grad_density=world.grad_density)
+                            grad_density=world.grad_density,
+                            fault_gain=world.fault_gain)
         _, rounds_per_launch, _ = self.resolve_runtime(spec)
         ex = PlanExecutor(tr, plan)
         # scoring needs curves, so the grid lane always reads them back
@@ -425,7 +446,8 @@ class ServeBackend:
         arrivals = draw_arrivals(n_req, job.arrival, seed=spec.seed)
         t_dec = time.time()
         res = server.serve(params, prompts, spec.T,
-                           admission=job.admission, arrivals=arrivals)
+                           admission=job.admission, arrivals=arrivals,
+                           deadline=job.deadline)
         dt = time.time() - t_dec
         return RunResult(
             spec=spec, backend=self.name, x=res.tokens,
@@ -438,10 +460,13 @@ class ServeBackend:
                    "occupancy": res.occupancy,
                    "decode_steps": res.decode_steps, "chunks": res.chunks,
                    "tap_rows": res.tap_rows,
+                   "evictions": res.evictions, "timeouts": res.timeouts,
                    "tau_report": tau_report(
                        res.schedule, parse_admission(job.admission)[0],
                        concurrency=job.n_slots,
-                       scenario_spec=job.arrival or "")})
+                       scenario_spec=job.arrival or "",
+                       evictions=res.evictions,
+                       timeouts=res.timeouts)})
 
 
 def run(spec: ExperimentSpec, backend: Optional[Backend] = None) -> RunResult:

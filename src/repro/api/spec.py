@@ -131,6 +131,11 @@ class TrainJob:
     #: the "*_interpret" twins (same kernels, Pallas interpreter; compiled
     #: impls degrade to these off-TPU with a one-time warning)
     update_impl: str = "reference"
+    #: guard rails (:class:`repro.faults.GuardConfig` defaults): per-round
+    #: non-finite detection skips the apply in-mask, a per-worker health
+    #: channel backs off repeat offenders' effective γ and recovers it on
+    #: clean rounds — the runtime survives injected ``fault:`` channels
+    guards: bool = False
 
     def make_arch(self):
         from ..configs import get_arch
@@ -176,12 +181,22 @@ class ServeJob:
     admission: str = "pure"             # scheduler-registry compact spec
     arrival: Optional[str] = None       # timing-registry "pattern[:gap=G]"
     steps_per_launch: int = 8           # decode steps per chunk launch
+    #: queue-wait budget in decode steps (slot lane only): a request still
+    #: queued past it is timed out at the admission sweep, never admitted,
+    #: and surfaced in the result's timeout map / τ-report
+    deadline: Optional[int] = None
 
     def __post_init__(self):
         if self.n_slots is not None and self.n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if self.steps_per_launch < 1:
             raise ValueError("steps_per_launch must be >= 1")
+        if self.deadline is not None:
+            if self.n_slots is None:
+                raise ValueError(
+                    "deadline is a slot-lane knob; set n_slots as well")
+            if self.deadline < 0:
+                raise ValueError("deadline must be >= 0")
         from ..distributed.admission import parse_admission
         parse_admission(self.admission)     # fail fast on grammar errors
         if self.arrival:

@@ -1,3 +1,6 @@
-from .checkpointer import save, restore, load_meta
+from .checkpointer import (CheckpointError, load_meta, restore, save,
+                           verify)
+from .snapshot import AsyncSnapshotter
 
-__all__ = ["save", "restore", "load_meta"]
+__all__ = ["save", "restore", "load_meta", "verify", "CheckpointError",
+           "AsyncSnapshotter"]

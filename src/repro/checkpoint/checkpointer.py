@@ -5,16 +5,33 @@ would be per-shard async writes — the interface (save/restore of the full
 train-state pytree keyed by flattened paths) is what the rest of the
 framework depends on.  bfloat16 leaves are bit-cast to uint16 for storage
 (npz has no native bf16).
+
+Durability contract: :func:`save` is ATOMIC at the file level — both
+``state.npz`` and ``meta.json`` are written to temp files in the target
+directory and ``os.replace``-d into place, so a crash mid-save never
+leaves a truncated file behind; the worst case (killed between the two
+replaces) is a fresh ``state.npz`` next to the previous ``meta.json``,
+which :func:`restore` detects via the sha256 recorded in the metadata and
+refuses loudly.  :func:`verify` runs the same integrity checks without
+materialising the state (what :class:`~repro.checkpoint.AsyncSnapshotter`
+uses to pick the newest restorable snapshot).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import tempfile
 
 import jax
 import numpy as np
 
 _BF16 = "__bf16__"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, partial, or corrupt — never restore from
+    it silently."""
 
 
 def _flatten(tree):
@@ -29,31 +46,125 @@ def _flatten(tree):
     return out
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _replace_into(path: str, name: str, write_fn) -> str:
+    """Write via ``write_fn(tmp_path)`` then atomically rename to
+    ``path/name`` (same directory, so the rename never crosses a
+    filesystem boundary)."""
+    fd, tmp = tempfile.mkstemp(dir=path, prefix=f".{name}.", suffix=".tmp")
+    os.close(fd)
+    try:
+        write_fn(tmp)
+        os.replace(tmp, os.path.join(path, name))
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return os.path.join(path, name)
+
+
 def save(path: str, state, step: int | None = None, meta: dict | None = None):
     os.makedirs(path, exist_ok=True)
     flat = _flatten(state)
-    np.savez(os.path.join(path, "state.npz"), **flat)
+
+    digest = {}
+
+    def write_state(tmp):
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        digest["sha"] = _sha256(tmp)
+        digest["nbytes"] = os.path.getsize(tmp)
+
+    # state first, meta last: meta.json names the state file's digest, so
+    # a crash between the two renames leaves a detectable (sha-mismatched)
+    # pair rather than a restorable-looking torn checkpoint
+    _replace_into(path, "state.npz", write_state)
     info = {"step": int(step) if step is not None else None,
-            "keys": sorted(flat), **(meta or {})}
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(info, f, indent=1)
+            "keys": sorted(flat),
+            "state_sha256": digest["sha"],
+            "state_nbytes": int(digest["nbytes"]),
+            **(meta or {})}
+
+    def write_meta(tmp):
+        with open(tmp, "w") as f:
+            json.dump(info, f, indent=1)
+
+    _replace_into(path, "meta.json", write_meta)
+
+
+def verify(path: str) -> dict:
+    """Integrity-check a checkpoint directory without loading the state;
+    returns the metadata dict or raises :class:`CheckpointError` with the
+    specific defect (missing file, truncation, digest mismatch)."""
+    meta_path = os.path.join(path, "meta.json")
+    state_path = os.path.join(path, "state.npz")
+    if not os.path.exists(meta_path):
+        raise CheckpointError(f"{path}: meta.json is missing — not a "
+                              "checkpoint, or save was interrupted")
+    try:
+        with open(meta_path) as f:
+            info = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(f"{path}: meta.json is unreadable ({e}) — "
+                              "corrupt checkpoint") from e
+    if not os.path.exists(state_path):
+        raise CheckpointError(f"{path}: state.npz is missing — corrupt or "
+                              "partially deleted checkpoint")
+    nbytes = info.get("state_nbytes")
+    if nbytes is not None and os.path.getsize(state_path) != int(nbytes):
+        raise CheckpointError(
+            f"{path}: state.npz is {os.path.getsize(state_path)} bytes but "
+            f"meta.json recorded {nbytes} — truncated or torn checkpoint")
+    sha = info.get("state_sha256")
+    if sha is not None and _sha256(state_path) != sha:
+        raise CheckpointError(
+            f"{path}: state.npz sha256 does not match meta.json — the "
+            "state and metadata are from different saves (crash between "
+            "the two atomic renames) or the file is corrupt")
+    return info
 
 
 def restore(path: str, like_state, shardings=None):
-    """Restore into the structure of ``like_state`` (shapes must match)."""
+    """Restore into the structure of ``like_state`` (shapes must match).
+
+    Fails loudly (:class:`CheckpointError`) on a missing, truncated or
+    digest-mismatched checkpoint instead of handing back garbage."""
+    import zipfile
+
     import ml_dtypes
 
-    data = np.load(os.path.join(path, "state.npz"))
+    verify(path)
+    state_path = os.path.join(path, "state.npz")
+    try:
+        data = np.load(state_path)
+        files = set(data.files)
+    except (zipfile.BadZipFile, ValueError, OSError) as e:
+        raise CheckpointError(
+            f"{path}: state.npz failed to load ({e}) — corrupt "
+            "checkpoint") from e
     leaves_paths = jax.tree_util.tree_leaves_with_path(like_state)
     sh_leaves = (jax.tree_util.tree_leaves(shardings)
                  if shardings is not None else [None] * len(leaves_paths))
     new_leaves = []
     for (p, old), sh in zip(leaves_paths, sh_leaves):
         key = jax.tree_util.keystr(p)
-        if _BF16 + key in data.files:
+        if _BF16 + key in files:
             arr = data[_BF16 + key].view(ml_dtypes.bfloat16)
-        else:
+        elif key in files:
             arr = data[key]
+        else:
+            raise CheckpointError(
+                f"{path}: leaf {key} is absent from the checkpoint — the "
+                "saved state has a different structure")
         if tuple(arr.shape) != tuple(old.shape):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {old.shape}")
         if arr.dtype != old.dtype:

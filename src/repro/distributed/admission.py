@@ -118,6 +118,12 @@ class AdmissionPolicy:
             self._proposals.extend(
                 int(w) for w in self.sched.next_workers(batch))
 
+    def cancel(self, rid: int) -> None:
+        """Withdraw a queued request (deadline timeout): it can no longer
+        be admitted — scheduler proposals that land on it cyclic-remap to
+        the next queued request, exactly like an already-admitted id."""
+        self._queued.discard(int(rid))
+
     # -- selection -----------------------------------------------------------
     def _remap(self, proposal: int, avail: set) -> int:
         """Nearest available request at/after the proposal in cyclic id
@@ -166,6 +172,8 @@ class AdmissionTrace:
         self._admit_step = {}       # rid -> decode step of admission
         self._admit_iter = {}       # rid -> completions at admission
         self._events = []           # (finish_step, slot, rid, in_flight)
+        self._evictions = {}        # rid -> quarantine step (device)
+        self._timeouts = {}         # rid -> deadline-timeout step (host)
         self.completions = 0
 
     def admitted(self, rid: int, step: int) -> None:
@@ -176,6 +184,18 @@ class AdmissionTrace:
                   in_flight: int) -> None:
         self._events.append((int(step), int(slot), int(rid), int(in_flight)))
         self.completions += 1
+
+    def evicted(self, rid: int, step: int) -> None:
+        """The device quarantined ``rid``'s lane (non-finite logits) at
+        decode step ``step``; its slot stays booked until the scheduled
+        completion, so the Schedule row is unchanged — the eviction is
+        extra degradation metadata."""
+        self._evictions[rid] = int(step)
+
+    def timed_out(self, rid: int, step: int) -> None:
+        """``rid``'s queue wait blew its deadline at ``step``: it is never
+        admitted and contributes no Schedule row."""
+        self._timeouts[rid] = int(step)
 
     def schedule(self) -> Schedule:
         ev = sorted(self._events)
@@ -193,3 +213,11 @@ class AdmissionTrace:
     @property
     def admit_steps(self) -> dict:
         return dict(self._admit_step)
+
+    @property
+    def evictions(self) -> dict:
+        return dict(self._evictions)
+
+    @property
+    def timeouts(self) -> dict:
+        return dict(self._timeouts)

@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..faults.guards import GuardConfig
 from ..models import model as M
 from ..models.specs import Spec, abstract_tree, axes_tree
 from ..optim import (OptConfig, adam_init, make_optimizer, make_delayed_apply,
@@ -50,6 +51,11 @@ class AsyncConfig:
     #: ``"pallas"``/``"pallas_interpret"`` route the delayed-buffer apply
     #: through the fused kernels (one HBM pass per tile, gbuf swap included).
     update_impl: Optional[str] = None
+    #: device-side guard rails (``repro.faults.GuardConfig``): non-finite
+    #: rounds skip the apply mask-style (no host readback) and a per-worker
+    #: health vector backs the effective stepsize off after bad receipts.
+    #: None compiles the exact unguarded step (no extra state, no checks).
+    guards: Optional[GuardConfig] = None
 
 
 class AsyncTrainer:
@@ -104,11 +110,17 @@ class AsyncTrainer:
             if self.async_cfg.delay_rounds > 0:
                 grp["gbuf"] = pspec_(dk, dk)
             pools[dk] = grp
-        return {
+        specs = {
             "pools": pools,
             "opt": {"count": Spec((), (), "zeros", "int32")},
             "step": Spec((), (), "zeros", "int32"),
         }
+        if self.async_cfg.guards is not None:
+            specs["guard"] = self._guard_specs()
+        return specs
+
+    def _guard_specs(self):
+        return {"health": Spec((self.n_groups,), (None,), "zeros", "float32")}
 
     def state_specs(self):
         """State tree as Specs (drives both init and shardings)."""
@@ -136,6 +148,8 @@ class AsyncTrainer:
         if self.async_cfg.delay_rounds > 0:
             specs["gbuf"] = jax.tree_util.tree_map(
                 grad_like, pspecs, is_leaf=lambda x: isinstance(x, Spec))
+        if self.async_cfg.guards is not None:
+            specs["guard"] = self._guard_specs()
         return specs
 
     def state_shardings(self, fsdp_params: bool = True):
@@ -150,13 +164,16 @@ class AsyncTrainer:
         if self.pooled:
             psh = NamedSharding(self.mesh, pooled_pspec(self.mesh, self.rules))
             scal = NamedSharding(self.mesh, P())
-            return {
+            out = {
                 "pools": jax.tree_util.tree_map(
                     lambda s: psh, specs["pools"],
                     is_leaf=lambda x: isinstance(x, Spec)),
                 "opt": {"count": scal},
                 "step": scal,
             }
+            if "guard" in specs:
+                out["guard"] = {"health": scal}
+            return out
         out = {
             "params": tree_shardings(specs["params"], self.mesh, self.rules,
                                      zero=fsdp_params),
@@ -170,6 +187,8 @@ class AsyncTrainer:
         if "gbuf" in specs:
             out["gbuf"] = tree_shardings(specs["gbuf"], self.mesh, self.rules,
                                          zero=fsdp_params)
+        if "guard" in specs:
+            out["guard"] = {"health": NamedSharding(self.mesh, P())}
         return out
 
     def abstract_state(self):
@@ -178,20 +197,25 @@ class AsyncTrainer:
     def init_state(self, key):
         params = M.init_params(self.cfg, key)
         if self.pooled:
-            return {
+            state = {
                 "pools": init_pools(self.pool_layout, params,
                                     delayed=self.async_cfg.delay_rounds > 0),
                 "opt": {"count": jnp.zeros((), jnp.int32)},
                 "step": jnp.zeros((), jnp.int32),
             }
-        state = {
-            "params": params,
-            "opt": adam_init(params),
-            "step": jnp.zeros((), jnp.int32),
-        }
-        if self.async_cfg.delay_rounds > 0:
-            state["gbuf"] = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, p.dtype), params)
+        else:
+            state = {
+                "params": params,
+                "opt": adam_init(params),
+                "step": jnp.zeros((), jnp.int32),
+            }
+            if self.async_cfg.delay_rounds > 0:
+                state["gbuf"] = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, p.dtype), params)
+        if self.async_cfg.guards is not None:
+            # every worker starts at full health (scale 1 = unguarded γ)
+            state["guard"] = {
+                "health": jnp.ones((self.n_groups,), jnp.float32)}
         return state
 
     def params_of(self, state):
@@ -248,7 +272,8 @@ class AsyncTrainer:
             pool_sh = NamedSharding(self.mesh,
                                     pooled_pspec(self.mesh, self.rules))
 
-        def step(state, batch, mask, delay_scale=None, grad_density=None):
+        def step(state, batch, mask, delay_scale=None, grad_density=None,
+                 fault_gain=None):
             if self.pooled:
                 params = unpool_tree(
                     self.pool_layout,
@@ -258,6 +283,23 @@ class AsyncTrainer:
                 params = state["params"]
             bsz = batch["tokens"].shape[0]
             w = self._example_weights(mask.astype(jnp.float32), bsz)
+            if fault_gain is not None:
+                # fault channel: multiplicative gain on the round's RECEIVED
+                # contribution (huge = inflated corrupted receipt, NaN =
+                # poisoned).  Folding the gain into the example weights
+                # would cancel in the CE's weight normalisation, so the
+                # participation-weighted mean gain scales the post-
+                # normalisation loss/grads instead (below).  Gate on the
+                # mask so a non-participant's gain (even NaN) cannot leak.
+                part = mask.astype(jnp.float32)
+                gain = jnp.where(part > 0,
+                                 jnp.asarray(fault_gain, jnp.float32), 1.0)
+                fault_c = jnp.where(
+                    jnp.sum(part) > 0,
+                    jnp.sum(part * gain) / jnp.maximum(jnp.sum(part), 1e-6),
+                    1.0)
+            else:
+                fault_c = None
 
             def lfn(p, b, wslice):
                 return M.loss_fn(cfg, p, b, example_weights=wslice,
@@ -295,6 +337,15 @@ class AsyncTrainer:
             else:
                 (loss, parts), grads = jax.value_and_grad(
                     lfn, has_aux=True)(params, batch, w)
+            if fault_c is not None:
+                # the corrupted/poisoned receipt: everything the server
+                # "receives" this round is scaled — grads (what the update
+                # consumes) and the reported loss components alike, so the
+                # breaker and the guard see exactly what the step applies
+                loss = loss * fault_c
+                parts = {k: v * fault_c for k, v in parts.items()}
+                grads = jax.tree_util.tree_map(
+                    lambda g: g * fault_c.astype(g.dtype), grads)
             if grad_density is not None:
                 # magnitude top-k per leaf at traced density: threshold at
                 # the (1 − density)-quantile of |g| and zero everything
@@ -311,19 +362,40 @@ class AsyncTrainer:
                     return g * keep.astype(g.dtype)
 
                 grads = jax.tree_util.tree_map(sparsify, grads)
-            # ZeRO: reshard grads to the optimizer-state sharding before the
-            # update (reduce-scatter) — clip/Adam f32 temps shrink by the
-            # data-axis factor, which is what makes 314B fit.  The pooled
-            # path reshards straight into pool layout instead: one concat
-            # pass, constrained so each device materialises only its rows
-            if self.pooled:
-                grad_pools = pool_tree(self.pool_layout, grads,
-                                       sharding=pool_sh)
+            if acfg.guards is not None:
+                # guard rails, all mask-style (no host readback): a round
+                # whose loss or raw grad norm is non-finite is SKIPPED via
+                # the old-vs-new state select below, which keeps every
+                # leaf — params, moments AND the delay buffer — at its
+                # previous value, so nothing non-finite survives the round
+                # (zeroing the grads here too would just spend an extra
+                # pass on values the select is about to discard).  The
+                # norm check must run on the FRESH grads, pre-apply: the
+                # delayed path's own gnorm is the stale buffer's, and a
+                # poisoned receipt has to be caught before it is buffered.
+                # Health: participants of a bad round (non-finite, or a
+                # finite norm spike past spike_norm) back off; clean
+                # participants recover toward 1.
+                gd = acfg.guards
+                raw_norm = global_norm(grads)
+                finite = jnp.isfinite(loss) & jnp.isfinite(raw_norm)
+                bad = ~finite
+                if gd.spike_norm is not None:
+                    bad = bad | (raw_norm > gd.spike_norm)
+                part = mask.astype(jnp.float32)
+                h = state["guard"]["health"]
+                gscale = jnp.sum(h * part) / jnp.maximum(part.sum(), 1.0)
+                h_next = jnp.clip(
+                    jnp.where(part > 0,
+                              jnp.where(bad, h * gd.backoff,
+                                        jnp.minimum(h * gd.recover, 1.0)),
+                              h),
+                    gd.min_scale, 1.0)
+                skipped = 1.0 - finite.astype(jnp.float32)
             else:
-                grads = jax.tree_util.tree_map(
-                    jax.lax.with_sharding_constraint, grads,
-                    self._grad_shardings())
-
+                finite = None
+                gscale = jnp.float32(1.0)
+                skipped = jnp.float32(0.0)
             if delay_scale is not None:
                 lr_scale = jnp.asarray(delay_scale, jnp.float32)
             elif acfg.delay_adaptive and acfg.delay_rounds > 0:
@@ -334,42 +406,82 @@ class AsyncTrainer:
             # skip the very first round (empty buffer) via a smooth gate
             gate = jnp.where(
                 (state["step"] == 0) & (acfg.delay_rounds > 0), 0.0, 1.0)
-            if self.pooled:
-                apply = pooled_delayed_apply if acfg.delay_rounds > 0 \
-                    else pooled_update
-                new_pools, new_count, gnorm = apply(
-                    grad_pools, state["pools"], state["opt"]["count"],
-                    self.opt, lr_scale=lr_scale * gate, mesh=self.mesh,
-                    axes=self.pool_axes, interpret=self._pool_interpret)
-                new_state = {
-                    "pools": new_pools,
-                    "opt": {"count": new_count},
-                    "step": state["step"] + 1,
-                }
-            elif acfg.delay_rounds > 0:
-                # one fused apply: consume the stale buffer, write the fresh
-                # grads back (reference impl composes the same semantics)
-                new_params, new_gbuf, new_opt, gnorm = self._delayed_apply(
-                    grads, state["gbuf"], state["opt"], params,
-                    self.opt, lr_scale=lr_scale * gate)
-                new_state = {
-                    "params": new_params,
-                    "opt": new_opt,
-                    "step": state["step"] + 1,
-                    "gbuf": new_gbuf,
-                }
-            else:
+            if acfg.guards is not None:
+                # participation-weighted mean health scales this round's γ
+                gate = gate * gscale
+
+            def _apply_update(_):
+                # ZeRO: reshard grads to the optimizer-state sharding before
+                # the update (reduce-scatter) — clip/Adam f32 temps shrink by
+                # the data-axis factor, which is what makes 314B fit.  The
+                # pooled path reshards straight into pool layout instead: one
+                # concat pass, constrained so each device materialises only
+                # its rows
+                if self.pooled:
+                    grad_pools = pool_tree(self.pool_layout, grads,
+                                           sharding=pool_sh)
+                    apply = pooled_delayed_apply if acfg.delay_rounds > 0 \
+                        else pooled_update
+                    new_pools, new_count, gnorm = apply(
+                        grad_pools, state["pools"], state["opt"]["count"],
+                        self.opt, lr_scale=lr_scale * gate, mesh=self.mesh,
+                        axes=self.pool_axes, interpret=self._pool_interpret)
+                    return {
+                        "pools": new_pools,
+                        "opt": {"count": new_count},
+                        "step": state["step"] + 1,
+                    }, gnorm
+                g = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, grads,
+                    self._grad_shardings())
+                if acfg.delay_rounds > 0:
+                    # one fused apply: consume the stale buffer, write the
+                    # fresh grads back (reference impl composes the same
+                    # semantics)
+                    new_params, new_gbuf, new_opt, gnorm = \
+                        self._delayed_apply(
+                            g, state["gbuf"], state["opt"], params,
+                            self.opt, lr_scale=lr_scale * gate)
+                    return {
+                        "params": new_params,
+                        "opt": new_opt,
+                        "step": state["step"] + 1,
+                        "gbuf": new_gbuf,
+                    }, gnorm
                 new_params, new_opt, gnorm = self._update(
-                    grads, state["opt"], params, self.opt,
+                    g, state["opt"], params, self.opt,
                     lr_scale=lr_scale * gate)
-                new_state = {
+                return {
                     "params": new_params,
                     "opt": new_opt,
                     "step": state["step"] + 1,
-                }
+                }, gnorm
+
+            if acfg.guards is None:
+                new_state, gnorm = _apply_update(None)
+            else:
+                # skipped round: every leaf keeps its previous value — the
+                # cond's false branch passes the old state straight through,
+                # so under the round scan a clean round pays one branch
+                # dispatch (not an old-vs-new select pass over every leaf)
+                # and a poisoned round skips the apply entirely.  Under the
+                # grid lane's vmap the cond lowers back to a select — both
+                # branches run, exactly the old cost.  The step counter
+                # always advances, and the health vector is how the skip is
+                # charged; a skipped round reports grad_norm 0 (no gradient
+                # was applied).
+                def _skip(_):
+                    old = {k: v for k, v in state.items() if k != "guard"}
+                    old["step"] = state["step"] + 1
+                    return old, jnp.float32(0.0)
+
+                new_state, gnorm = jax.lax.cond(
+                    finite, _apply_update, _skip, None)
+                new_state["guard"] = {"health": h_next}
             metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
                        "grad_norm": gnorm,
-                       "participation": jnp.mean(mask.astype(jnp.float32))}
+                       "participation": jnp.mean(mask.astype(jnp.float32)),
+                       "skipped": skipped, "gscale": gscale}
             return new_state, metrics
 
         from .sharding import sharded_trace
@@ -377,36 +489,31 @@ class AsyncTrainer:
 
     def jit_train_step(self, batch_shape, donate: bool = True,
                        with_delay_scale: bool = False,
-                       with_grad_density: bool = False):
+                       with_grad_density: bool = False,
+                       with_fault_gain: bool = False):
         """pjit-compiled train step for a (batch, seq) shape.
 
-        The compiled signature is exactly positional:
-
-        * base — ``step(state, batch, mask)``,
-        * ``with_delay_scale`` — ``+ delay_scale`` (per-round stepsize
-          scale, replicated traced scalar),
-        * ``with_grad_density`` — ``+ grad_density`` (per-round gradient
-          keep-density; composes with ``with_delay_scale``, and without it
-          the 4th positional argument IS the density — a wrapper pins the
-          underlying step's ``delay_scale`` slot to None so the trainer's
-          static stepsize rule stays in charge)."""
+        The compiled signature is exactly positional: ``step(state, batch,
+        mask)`` plus one replicated traced extra per enabled channel, in
+        the fixed order ``delay_scale`` (per-round stepsize scale), then
+        ``grad_density`` (per-round gradient keep-density), then
+        ``fault_gain`` (per-worker loss-weight gains) — each present only
+        when its ``with_*`` flag is on, the remaining channels pinned to
+        None inside (so e.g. density-without-scale leaves the trainer's
+        static stepsize rule in charge)."""
         bspecs = M.batch_specs(self.cfg, *batch_shape)
         batch_sh = tree_shardings(bspecs, self.mesh, self.rules)
         state_sh = self.state_shardings()
         repl = NamedSharding(self.mesh, P())
         step = self.train_step_fn()
-        in_sh = (state_sh, batch_sh, repl)
-        if with_delay_scale and with_grad_density:
-            fn_, extra = step, 2
-        elif with_grad_density:
-            def fn_(state, batch, mask, grad_density):
-                return step(state, batch, mask, None, grad_density)
-            extra = 1
-        elif with_delay_scale:
-            fn_, extra = step, 1
-        else:
-            fn_, extra = step, 0
-        in_sh = in_sh + (repl,) * extra
+        names = [n for n, on in (("delay_scale", with_delay_scale),
+                                 ("grad_density", with_grad_density),
+                                 ("fault_gain", with_fault_gain)) if on]
+
+        def fn_(state, batch, mask, *extras):
+            return step(state, batch, mask, **dict(zip(names, extras)))
+
+        in_sh = (state_sh, batch_sh, repl) + (repl,) * len(names)
         fn = jax.jit(
             fn_,
             in_shardings=in_sh,

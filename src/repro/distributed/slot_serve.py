@@ -28,6 +28,17 @@ Design, mirroring the repo's schedule-is-value-independent thesis:
   jit produces the first token + a ctx-length cache, and a cached ``admit``
   jit writes the row into the slot cache at a *traced* slot index — one
   compile covers every admission.
+* **Sampling state is per-request**, not per-pool: each slot carries its
+  own PRNG key, reset at admission to ``fold_in(PRNGKey(seed), rid)`` and
+  split once per decode step.  A request's sampled token stream is a pure
+  function of (seed, rid, step-within-request) — independent of slot
+  assignment, pool size and whatever else is decoding alongside it.
+* **Degradation is masked, not crashed**: an active lane whose decode
+  logits go non-finite is QUARANTINED on device (its budget zeroed, no
+  token emitted) and the eviction surfaces host-side through the tap so
+  the admission trace records it; queued requests whose wait exceeds a
+  ``deadline`` are timed out at admission sweeps without ever occupying a
+  slot.  Both degrade per-request — the pool keeps serving.
 
 Compiled artifacts are cached on the instance (the PlanExecutor rule: a
 fresh closure per call would silently recompile every run), asserted by
@@ -73,15 +84,24 @@ class SlotConfig:
 
 @dataclasses.dataclass
 class ServeResult:
-    """Per-request token matrix + the realised admission world."""
+    """Per-request token matrix + the realised admission world.
 
-    tokens: np.ndarray           # (n_requests, max_new) int32
+    Degraded requests pad: an evicted request's ``tokens`` row holds −1
+    from its quarantine step on; a timed-out request's row is all −1 and
+    its ``ttft_steps`` entry is −1 (it was never admitted).
+    """
+
+    tokens: np.ndarray           # (n_requests, max_new) int32, −1 padded
     schedule: object             # repro.core.engine.Schedule of admissions
     ttft_steps: np.ndarray       # (n_requests,) admission − arrival (steps)
     occupancy: float             # mean fraction of busy slot-steps
     decode_steps: int            # launched scan steps (incl. drained tail)
     chunks: int                  # XLA launches of the chunk program
     tap_rows: int                # ordered io_callback rows delivered
+    evictions: dict = dataclasses.field(default_factory=dict)
+    #: rid -> decode step its lane was quarantined (non-finite logits)
+    timeouts: dict = dataclasses.field(default_factory=dict)
+    #: rid -> decode step its queue wait exceeded the deadline
 
 
 class SlotServer:
@@ -112,7 +132,7 @@ class SlotServer:
                                           if S > 1 else None))
         repl = NamedSharding(self.mesh, P())
         return {"cache": cache_sh, "toks": lane, "pos": lane,
-                "active": lane, "remaining": lane, "key": repl}
+                "active": lane, "remaining": lane, "keys": repl}
 
     # ---- state -------------------------------------------------------------
     def init_state(self) -> dict:
@@ -126,7 +146,10 @@ class SlotServer:
             "pos": jnp.zeros((S,), jnp.int32),
             "active": jnp.zeros((S,), bool),
             "remaining": jnp.zeros((S,), jnp.int32),
-            "key": jax.random.PRNGKey(self.slots.seed),
+            # (S, 2) per-slot sampling keys; placeholders until admission
+            # re-seeds each slot with its request's fold_in key
+            "keys": jnp.tile(jax.random.PRNGKey(self.slots.seed)[None],
+                             (S, 1)),
         }
         # pin the canonical shardings up front: every producer of a state
         # tree (init / admit / chunk) must agree, or the jits re-specialise
@@ -134,13 +157,14 @@ class SlotServer:
         return jax.device_put(state, self.state_shardings())
 
     # ---- tap ---------------------------------------------------------------
-    def _emit_tap(self, idx, toks, active):
+    def _emit_tap(self, idx, toks, active, quarantined):
         """Host side of the ordered io_callback (bound once so the chunk
         program stays stable; the per-run consumer swaps in via
         ``_tap_sink``)."""
         sink = self._tap_sink
         if sink is not None:
-            sink(int(idx), np.asarray(toks), np.asarray(active))
+            sink(int(idx), np.asarray(toks), np.asarray(active),
+                 np.asarray(quarantined))
 
     # ---- compiled programs -------------------------------------------------
     def chunk_fn(self):
@@ -165,22 +189,32 @@ class SlotServer:
                 logits, cache = decode(params, st["cache"], st["toks"],
                                        st["pos"])
                 act = st["active"]
-                key = st["key"]
+                # quarantine: an active lane whose logits go non-finite is
+                # evicted in-mask — no token this step, budget zeroed so the
+                # lane freezes (idempotent writes) until re-admission; the
+                # rest of the pool is untouched
+                finite = jnp.all(jnp.isfinite(logits), axis=-1)
+                quar = act & ~finite
+                act = act & finite
+                keys = st["keys"]
                 if temp > 0:
-                    key, sub = jax.random.split(key)
-                    nxt = jax.random.categorical(
-                        sub, logits / temp, axis=-1).astype(jnp.int32)
+                    # per-slot streams: each lane splits its own key, so a
+                    # request's samples depend only on (seed, rid, step)
+                    pair = jax.vmap(jax.random.split)(keys)      # (S, 2, 2)
+                    keys, subs = pair[:, 0], pair[:, 1]
+                    nxt = jax.vmap(lambda k, lg: jax.random.categorical(
+                        k, lg / temp))(subs, logits).astype(jnp.int32)
                 else:
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 step = act.astype(jnp.int32)
                 toks = jnp.where(act, nxt, st["toks"])
-                rem = st["remaining"] - step
+                rem = (st["remaining"] - step) * (~quar).astype(jnp.int32)
                 # ordered: per-request consumers see tokens in decode order
-                io_callback(emit, None, idx, toks, act, ordered=True)
+                io_callback(emit, None, idx, toks, act, quar, ordered=True)
                 return {"cache": cache, "toks": toks,
                         "pos": st["pos"] + step,
                         "active": act & (rem > 0), "remaining": rem,
-                        "key": key}, None
+                        "keys": keys}, None
 
             state, _ = jax.lax.scan(
                 round_fn, state, idx0 + jnp.arange(K, dtype=jnp.int32))
@@ -195,13 +229,16 @@ class SlotServer:
         return self._chunk_fn
 
     def admit_fn(self):
-        """Jitted ``admit(state, pcache, slot, tok0, pos0, rem0)``: write a
-        prefilled request into slot ``slot`` (a TRACED index — one compile
-        covers every admission into any slot)."""
+        """Jitted ``admit(state, pcache, slot, tok0, pos0, rem0, key)``:
+        write a prefilled request into slot ``slot`` (a TRACED index — one
+        compile covers every admission into any slot).  ``key`` is the
+        request's own sampling key (``fold_in(PRNGKey(seed), rid)``) — it
+        resets the slot's stream so sampling never leaks across the
+        requests that share a lane over time."""
         if self._admit_fn is not None:
             return self._admit_fn
 
-        def admit(state, pcache, slot, tok0, pos0, rem0):
+        def admit(state, pcache, slot, tok0, pos0, rem0, key):
             def wr(c, p):
                 if c.ndim == p.ndim + 1:      # per-slot positions row
                     return jax.lax.dynamic_update_slice(
@@ -217,7 +254,7 @@ class SlotServer:
                 "pos": state["pos"].at[slot].set(pos0),
                 "active": state["active"].at[slot].set(rem0 > 0),
                 "remaining": state["remaining"].at[slot].set(rem0),
-                "key": state["key"],
+                "keys": state["keys"].at[slot].set(key),
             }
 
         self._admit_fn = jax.jit(admit, out_shardings=self.state_shardings(),
@@ -257,6 +294,7 @@ class SlotServer:
     def serve(self, params, prompts: np.ndarray, max_new: int, *,
               admission: Union[str, AdmissionPolicy] = "pure",
               arrivals: Optional[np.ndarray] = None,
+              deadline: Optional[int] = None,
               on_token: Optional[Callable] = None) -> ServeResult:
         """Serve every prompt to its ``max_new``-token budget.
 
@@ -264,13 +302,20 @@ class SlotServer:
         (n_requests,) arrival steps on the decode-step clock (see
         :func:`~repro.distributed.admission.draw_arrivals`); ``admission``:
         a policy name/compact spec or a prepared :class:`AdmissionPolicy`;
-        ``on_token(rid, token, step)`` fires per streamed token from the
-        tap thread (token already a host int).
+        ``deadline``: optional queue-wait budget in decode steps — a
+        request still queued when ``now − arrival > deadline`` is timed
+        out at the admission sweep (chunk-boundary granularity) and never
+        occupies a slot; ``on_token(rid, token, step)`` fires per streamed
+        token from the tap thread (token already a host int).
 
         The loop is steered entirely by host bookkeeping: completions are
         deterministic (``admit_step + max_new − 1``), so no device value is
         ever read to decide admission — only the final token matrix is
-        assembled from the tap stream.
+        assembled from the tap stream.  Quarantine evictions are the one
+        DEVICE-initiated event: the host learns of them from the tap (so
+        possibly chunks late), keeps the slot allocated until the original
+        completion step (the frozen lane idle-decodes harmlessly), and
+        records the eviction in the result + admission trace.
         """
         S, K = self.slots.n_slots, self.slots.steps_per_launch
         n_req, plen = prompts.shape
@@ -290,11 +335,14 @@ class SlotServer:
                else np.asarray(arrivals, np.int64))
         if arr.shape != (n_req,):
             raise ValueError(f"arrivals must be ({n_req},); got {arr.shape}")
+        if deadline is not None and deadline < 0:
+            raise ValueError(f"deadline must be >= 0 (got {deadline})")
 
         chunk = self.chunk_fn()
         admit = self.admit_fn()
         pf = self.prefill_fn(plen)
         prompts_dev = jnp.asarray(prompts, jnp.int32)
+        base_key = jax.random.PRNGKey(self.slots.seed)
 
         trace = AdmissionTrace(n_req, wait_b=policy.wait_b)
         state = self.init_state()
@@ -305,15 +353,29 @@ class SlotServer:
         step_maps: dict = {}          # chunk start -> slot_rid snapshot
         tap_stats = {"rows": 0}
         mismatches: list = []
+        evicted: dict = {}            # rid -> quarantine step (from tap)
+        timeouts: dict = {}           # rid -> timeout step (host sweep)
 
-        def sink(idx, toks, act):
+        def sink(idx, toks, act, quar):
             tap_stats["rows"] += 1
             m = step_maps.get(idx - idx % K)
             if m is None:
                 mismatches.append(f"step {idx}: no chunk snapshot")
                 return
             for s, rid in enumerate(m):
-                predicted = rid >= 0 and (idx - admit_t[rid]) < max_new - 1
+                if bool(quar[s]):
+                    if rid < 0:
+                        mismatches.append(
+                            f"step {idx} slot {s}: quarantine on an empty "
+                            "lane")
+                        continue
+                    if rid not in evicted:
+                        evicted[rid] = int(idx)
+                        trace.evicted(rid, int(idx))
+                ev = evicted.get(rid) if rid >= 0 else None
+                predicted = (rid >= 0
+                             and (idx - admit_t[rid]) < max_new - 1
+                             and (ev is None or idx < ev))
                 if bool(act[s]) != predicted:
                     mismatches.append(
                         f"step {idx} slot {s}: device active={bool(act[s])} "
@@ -347,6 +409,15 @@ class SlotServer:
                     trace.completed(rid, s, fin[rid], in_flight + 1)
                     policy.notify_completion(rid)
                     done += 1
+                # -- deadline timeouts (queue-wait budget) -----------------
+                if deadline is not None:
+                    for r in range(n_req):
+                        if (r not in admit_t and r not in timeouts
+                                and arr[r] <= t and t - arr[r] > deadline):
+                            timeouts[r] = t
+                            policy.cancel(r)
+                            trace.timed_out(r, t)
+                            done += 1
                 # -- admissions into free slots ----------------------------
                 arrived = {r for r in range(n_req) if arr[r] <= t}
                 free = [s for s in range(S) if slot_rid[s] < 0]
@@ -357,7 +428,8 @@ class SlotServer:
                     s = free[0]
                     tok0, pcache = pf(params, prompts_dev[rid:rid + 1])
                     state = admit(state, pcache, s, tok0[0],
-                                  jnp.int32(plen), jnp.int32(max_new - 1))
+                                  jnp.int32(plen), jnp.int32(max_new - 1),
+                                  jax.random.fold_in(base_key, rid))
                     outputs[rid] = [tok0]
                     admit_t[rid] = t
                     fin[rid] = t + max_new - 1
@@ -377,7 +449,7 @@ class SlotServer:
                     # to the next chunk boundary at/after the earliest
                     # arrival — no launch for empty air
                     nxt = min(arr[r] for r in range(n_req)
-                              if r not in admit_t)
+                              if r not in admit_t and r not in timeouts)
                     t = max(t + K, -(-int(nxt) // K) * K)
                     continue
                 # -- one chunk launch --------------------------------------
@@ -404,18 +476,29 @@ class SlotServer:
                 "rows — an io_callback was dropped or the run was "
                 "interrupted mid-chunk")
 
-        toks = np.empty((n_req, max_new), np.int32)
+        toks = np.full((n_req, max_new), -1, np.int32)
         for rid in range(n_req):
+            if rid in timeouts:
+                continue                              # never admitted: −1 row
             row = outputs[rid]
             row[0] = int(np.asarray(row[0])[0])       # deferred tok0 read
-            if len(row) != max_new:
-                raise RuntimeError(
-                    f"request {rid} streamed {len(row)}/{max_new} tokens")
-            toks[rid] = row
-        ttft = np.array([admit_t[r] - arr[r] for r in range(n_req)],
-                        np.int64)
+            if rid in evicted:
+                if len(row) > max_new:
+                    raise RuntimeError(
+                        f"request {rid} streamed {len(row)} tokens past "
+                        f"its {max_new} budget despite quarantine")
+                toks[rid, :len(row)] = row            # −1 from eviction on
+            else:
+                if len(row) != max_new:
+                    raise RuntimeError(
+                        f"request {rid} streamed {len(row)}/{max_new} "
+                        "tokens")
+                toks[rid] = row
+        ttft = np.array([admit_t[r] - arr[r] if r in admit_t else -1
+                         for r in range(n_req)], np.int64)
         occ = busy_steps / (chunks * K * S) if chunks else 0.0
         return ServeResult(tokens=toks, schedule=trace.schedule(),
                            ttft_steps=ttft, occupancy=float(occ),
                            decode_steps=chunks * K, chunks=chunks,
-                           tap_rows=tap_stats["rows"])
+                           tap_rows=tap_stats["rows"],
+                           evictions=evicted, timeouts=timeouts)

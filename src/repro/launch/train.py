@@ -57,18 +57,22 @@ def main():
     ap.add_argument("--metrics", default="chunk",
                     choices=["chunk", "tap", "none"],
                     help="scan metric transport: 'chunk' reads curves "
-                         "back at chunk boundaries (checkpoint barriers "
+                         "back at chunk boundaries (--ckpt-every barriers "
                          "work); 'tap' streams every round through a "
                          "device-side io_callback (live logging at any "
-                         "--rounds-per-launch, but no state for "
-                         "checkpoints); 'none' discards metrics on device "
-                         "(fastest, final state only)")
+                         "--rounds-per-launch); 'none' discards metrics "
+                         "on device (fastest, final state only).  On "
+                         "'tap'/'none' use --snapshot-every for periodic "
+                         "checkpoints — barrier-free, so the transports "
+                         "keep their speed")
     ap.add_argument("--scenario", default=None,
                     help="non-stationary world spec (repro.scenarios "
                          "grammar), e.g. 'straggler:k=2,factor=8;"
-                         "elastic:every=32,span=8' or "
-                         "'data_drift:a0=1.2,a1=2.0;sparsify:frac=0.5'; "
-                         "omit for the stationary world")
+                         "elastic:every=32,span=8', "
+                         "'data_drift:a0=1.2,a1=2.0;sparsify:frac=0.5' or "
+                         "a fault world like 'nan_grad:k=1,every=32;"
+                         "worker_crash:at=64,span=16' (pair with "
+                         "--guards); omit for the stationary world")
     ap.add_argument("--tau-report", action="store_true",
                     help="print the windowed tau-statistics report "
                          "(realised tau_max/tau_avg/tau_C per window vs "
@@ -80,6 +84,21 @@ def main():
     ap.add_argument("--auto-rules", action="store_true")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="barrier-free durability (scan runtime, any "
+                         "--metrics): offer an async device snapshot of "
+                         "the carry every N rounds (chunk-boundary "
+                         "granularity — align with --rounds-per-launch), "
+                         "finalised to atomic checkpoints under "
+                         "<--ckpt>/round-XXXXXXXX with no mid-run host "
+                         "barrier; a killed run resumes from the newest "
+                         "restorable snapshot")
+    ap.add_argument("--guards", action="store_true",
+                    help="arm the trainer's non-finite guard rails: "
+                         "rounds with non-finite loss/grads are skipped "
+                         "in-mask (the apply is gated, never the scan), "
+                         "offending workers' effective stepsize backs off "
+                         "and recovers (repro.faults.GuardConfig defaults)")
     ap.add_argument("--heterogeneity", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -100,7 +119,8 @@ def main():
         heterogeneity=args.heterogeneity,
         delay_rounds=0 if args.sync else args.delay_rounds,
         microbatches=args.microbatches,
-        update_impl=args.update_impl)
+        update_impl=args.update_impl,
+        guards=args.guards)
     cfg = job.make_arch()
     rules = auto_rules(cfg, mesh.shape.get("model", 1)) if args.auto_rules \
         else DEFAULT_RULES
@@ -134,8 +154,17 @@ def main():
             and args.ckpt and args.ckpt_every):
         print(f"warning: --metrics={args.metrics} never materialises "
               f"mid-run state on host, so --ckpt-every barriers cannot "
-              f"fire; only the final checkpoint will be written (use "
-              f"--metrics chunk for periodic checkpoints)")
+              f"fire; use --snapshot-every for barrier-free periodic "
+              f"checkpoints on this transport")
+
+    snapshot = None
+    if args.snapshot_every:
+        if args.runtime != "scan":
+            ap.error("--snapshot-every is a scan-runtime knob")
+        if not args.ckpt:
+            ap.error("--snapshot-every needs --ckpt (snapshot directory)")
+        snapshot = checkpoint.AsyncSnapshotter(
+            args.ckpt, args.snapshot_every, meta={"arch": cfg.name})
 
     def on_step(i, state, m):
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
@@ -153,14 +182,17 @@ def main():
     strip_on_step = args.metrics == "none" and args.runtime == "scan"
     backend = TrainerBackend(
         mesh=mesh, rules=rules,
-        on_step=None if strip_on_step else on_step)
+        on_step=None if strip_on_step else on_step,
+        snapshot=snapshot)
     res = backend.run(spec)
     final = "n/a" if res.losses is None else f"{res.losses[-1]:.4f}"
     print(f"done in {res.seconds:.1f}s  final loss={final}  "
           f"tau_max={res.trace['tau_max']}  "
           f"launches={res.extra['launches']} "
           f"host_syncs={res.extra['host_syncs']} "
-          f"tap_events={res.extra['tap_events']}")
+          f"tap_events={res.extra['tap_events']}"
+          + (f" snapshots={res.extra['snapshots']}"
+             if args.snapshot_every else ""))
     if args.tau_report:
         from ..scenarios import render_report, tau_report
         print(render_report(tau_report(

@@ -50,8 +50,12 @@ import numpy as np
 from .plan import RunPlan
 
 #: fixed metric order of the on-device accumulator row; mirrors the dict
-#: returned by ``AsyncTrainer.train_step_fn``
-METRICS = ("loss", "ce", "aux", "grad_norm", "participation")
+#: returned by ``AsyncTrainer.train_step_fn`` (``skipped``/``gscale`` are
+#: the guard-rail channels — 0.0/1.0 on an unguarded trainer)
+METRICS = ("loss", "ce", "aux", "grad_norm", "participation",
+           "skipped", "gscale")
+
+_LOSS_IDX = METRICS.index("loss")
 
 #: metric transport modes of the scan executor
 METRIC_MODES = ("chunk", "tap", "none")
@@ -74,11 +78,18 @@ class ExecStats:
       completion barrier, not a metric transfer).
     * ``tap_events`` — metric rows streamed host-ward by the io_callback
       tap (one per round in ``"tap"`` mode, zero otherwise).
+    * ``snapshots`` — async device snapshots offered to the run's
+      :class:`repro.checkpoint.AsyncSnapshotter` (zero without one).
+    * ``tripped_round`` — round at which the divergence breaker tripped
+      through the tap lane (None = never tripped / no breaker): the run
+      stopped launching after the chunk containing it.
     """
 
     launches: int = 0
     host_syncs: int = 0
     tap_events: int = 0
+    snapshots: int = 0
+    tripped_round: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -231,25 +242,28 @@ class PlanExecutor:
 
         Scenario channels ride the same xs dict: ``xs["cdf"]`` (data-drift
         phase index) feeds the batch synthesiser, ``xs["dens"]``
-        (keep-density) feeds the step's sparsifier.
+        (keep-density) feeds the step's sparsifier, ``xs["gain"]``
+        (per-worker fault gains) feeds the step's fault channel.
         """
         import jax
 
         step, batch_of, repl = self._step, self._batch_of, self._repl
         with_density = self.plan.grad_density is not None
+        with_gain = self.plan.fault_gain is not None
         with_scale = self.plan.adaptive or force_scale or with_density
 
         def body(st, xs):
             batch = jax.tree_util.tree_map(
                 lambda x: jax.lax.with_sharding_constraint(x, repl),
                 batch_of(xs["key"], xs.get("cdf")))
+            kw = {}
+            if with_scale:
+                kw["delay_scale"] = xs["scale"]
             if with_density:
-                st, m = step(st, batch, xs["mask"], xs["scale"],
-                             xs["dens"])
-            elif with_scale:
-                st, m = step(st, batch, xs["mask"], xs["scale"])
-            else:
-                st, m = step(st, batch, xs["mask"])
+                kw["grad_density"] = xs["dens"]
+            if with_gain:
+                kw["fault_gain"] = xs["gain"]
+            st, m = step(st, batch, xs["mask"], **kw)
             return st, m
 
         return body
@@ -341,13 +355,26 @@ class PlanExecutor:
             xs["cdf"] = jnp.asarray(self.plan.cdf_index[lo:hi])
         if self.plan.grad_density is not None:
             xs["dens"] = jnp.asarray(self.plan.grad_density[lo:hi])
+        if self.plan.fault_gain is not None:
+            xs["gain"] = jnp.asarray(self.plan.fault_gain[lo:hi])
         return xs
+
+    def _maybe_snapshot(self, snapshot, hi: int, state, stats) -> None:
+        """Offer the end-of-chunk carry to the async snapshotter.  The
+        offer dispatches a non-donating device copy and starts the host
+        fetch, then returns — the device pipeline never drains (the next
+        chunk is already free to launch), which is the barrier-free
+        durability contract."""
+        if snapshot is not None and snapshot.due(hi, self.plan.rounds):
+            snapshot.offer(hi, state)
+            stats.snapshots += 1
 
     # ------------------------------------------------------------------ scan
     def run_scan(self, state, *, rounds_per_launch: int = 8,
                  metrics: str = "chunk",
                  on_step: Optional[Callable] = None,
-                 start_round: int = 0) -> ExecResult:
+                 start_round: int = 0,
+                 snapshot=None, breaker=None) -> ExecResult:
         """Execute plan rounds ``[start_round, rounds)``, K per launch.
 
         One XLA launch covers K = ``rounds_per_launch`` rounds; the
@@ -371,7 +398,21 @@ class PlanExecutor:
 
         ``start_round > 0`` resumes mid-plan: the data keys are a pure
         function of (seed, round), so a restored run regenerates the
-        identical batch stream.
+        identical batch stream.  ``start_round == rounds`` is an exact
+        no-op (zero launches, empty curves, state returned untouched).
+
+        ``snapshot`` (any metric mode) is a
+        :class:`repro.checkpoint.AsyncSnapshotter`: chunk-boundary carries
+        it declares due are offered barrier-free — a non-donating device
+        copy plus an async host fetch, finalised to an atomic checkpoint
+        while later chunks keep the device busy — which is what gives
+        ``"tap"``/``"none"`` runs durability without mid-run host
+        barriers.  ``breaker`` (tap mode only) is a
+        :class:`repro.faults.DivergenceBreaker` fed each round's loss from
+        the tap sink; once tripped, no further chunks are launched
+        (enqueued ones drain normally) and the trip round is reported in
+        ``stats.tripped_round`` with the curves truncated to the rounds
+        actually launched.
         """
         import jax
 
@@ -382,12 +423,16 @@ class PlanExecutor:
             raise ValueError(
                 'metrics="none" discards metrics on device; an on_step '
                 'callback would never fire — use "tap" or "chunk"')
+        if breaker is not None and metrics != "tap":
+            raise ValueError(
+                'the divergence breaker trips through the tap lane — run '
+                'with metrics="tap" (chunk/none never stream per-round '
+                'losses to the host mid-run)')
         plan = self.plan
         fn = self._chunk_jit(metrics)
         stats = ExecStats()
         bounds = list(_chunk_bounds(plan.rounds, rounds_per_launch,
                                     start_round))
-        n_rounds = plan.rounds - start_round
 
         if metrics == "tap":
             tap_rows = {}
@@ -395,14 +440,21 @@ class PlanExecutor:
             def sink(i, row):
                 tap_rows[i] = row
                 stats.tap_events += 1
+                if breaker is not None:
+                    breaker.observe(i, row[_LOSS_IDX])
                 if on_step is not None:
                     on_step(i, None, _row_dict(row))
 
+            launched_hi = start_round
             self._tap_sink = sink
             try:
                 for lo, hi in bounds:
+                    if breaker is not None and breaker.tripped:
+                        break               # stop launching; queue drains
                     state = fn(state, self._slices(lo, hi))
                     stats.launches += 1
+                    launched_hi = hi
+                    self._maybe_snapshot(snapshot, hi, state, stats)
                 # completion barrier (not a metric transfer): flushes the
                 # enqueued chunks, then drains the callback queue — array
                 # readiness alone does NOT guarantee pending io_callbacks
@@ -411,13 +463,18 @@ class PlanExecutor:
                 jax.effects_barrier()
             finally:
                 self._tap_sink = None
+            if snapshot is not None:
+                snapshot.drain()
+            if breaker is not None:
+                stats.tripped_round = breaker.tripped_round
+            n_rounds = launched_hi - start_round
             if len(tap_rows) != n_rounds:
                 raise RuntimeError(
                     f"metrics tap delivered {len(tap_rows)}/{n_rounds} "
                     f"rows — an io_callback was dropped or the run was "
                     f"interrupted mid-chunk")
             all_ms = (np.stack([tap_rows[i] for i in
-                                range(start_round, plan.rounds)])
+                                range(start_round, launched_hi)])
                       if n_rounds else np.zeros((0, len(METRICS)),
                                                 np.float32))
             return ExecResult(
@@ -429,7 +486,10 @@ class PlanExecutor:
             for lo, hi in bounds:
                 state = fn(state, self._slices(lo, hi))
                 stats.launches += 1
+                self._maybe_snapshot(snapshot, hi, state, stats)
             state = jax.block_until_ready(state)
+            if snapshot is not None:
+                snapshot.drain()
             return ExecResult(state=state, metrics={}, stats=stats)
 
         # metrics == "chunk"
@@ -437,6 +497,7 @@ class PlanExecutor:
         for lo, hi in bounds:
             state, ms = fn(state, self._slices(lo, hi))
             stats.launches += 1
+            self._maybe_snapshot(snapshot, hi, state, stats)
             if on_step is not None:
                 ms = np.asarray(ms)          # blocking readback per chunk
                 stats.host_syncs += 1
@@ -449,6 +510,8 @@ class PlanExecutor:
             rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
             stats.host_syncs = 1
         state = jax.block_until_ready(state)
+        if snapshot is not None:
+            snapshot.drain()
         all_ms = np.concatenate([np.asarray(r) for r in rows], axis=0) \
             if rows else np.zeros((0, len(METRICS)), np.float32)
         return ExecResult(
@@ -473,7 +536,7 @@ class PlanExecutor:
 
     def run_grid(self, state, *, rounds_per_launch: int = 8,
                  metrics: str = "chunk",
-                 start_round: int = 0) -> ExecResult:
+                 start_round: int = 0, snapshot=None) -> ExecResult:
         """Execute ALL grid points of a γ-axis plan in one compiled
         program per chunk (vmap over γ).
 
@@ -485,6 +548,10 @@ class PlanExecutor:
         or not at all under ``"none"``.  ``"tap"`` is rejected: io_callback
         rows interleave unordered across vmapped lanes, so a per-round
         stream would be misleading.
+
+        ``snapshot`` offers the STACKED ``(n_grid, ...)`` carry at due
+        chunk boundaries — a restored grid snapshot feeds straight back in
+        as the already-stacked state of a resumed grid run.
         """
         import jax
 
@@ -519,12 +586,15 @@ class PlanExecutor:
             out = fn(states, shared, scales)
             states, ms = out if metrics == "chunk" else (out, None)
             stats.launches += 1
+            self._maybe_snapshot(snapshot, hi, states, stats)
             if ms is not None:
                 rows.append(ms)
         if rows:
             rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
             stats.host_syncs = 1
         states = jax.block_until_ready(states)
+        if snapshot is not None:
+            snapshot.drain()
         all_ms = np.concatenate(rows, axis=1) if rows else None
         return ExecResult(
             state=states,
@@ -545,6 +615,7 @@ class PlanExecutor:
 
         plan = self.plan
         with_density = plan.grad_density is not None
+        with_gain = plan.fault_gain is not None
         with_scale = plan.adaptive or with_density
         if self._eager is None:
             self._eager = (
@@ -553,7 +624,8 @@ class PlanExecutor:
                     (plan.global_batch, plan.seq_len),
                     donate=self.donate,
                     with_delay_scale=with_scale,
-                    with_grad_density=with_density))
+                    with_grad_density=with_density,
+                    with_fault_gain=with_gain))
         batch_of, step = self._eager
         rows = []
         stats = ExecStats()
@@ -566,6 +638,8 @@ class PlanExecutor:
                 args += (jnp.float32(plan.delay_scales[i]),)  # static rule
             if with_density:
                 args += (jnp.float32(plan.grad_density[i]),)
+            if with_gain:
+                args += (jnp.asarray(plan.fault_gain[i]),)
             state, m = step(*args)
             stats.launches += 1
             row = {k: float(m[k]) for k in METRICS}  # host sync per round
@@ -583,12 +657,14 @@ class PlanExecutor:
 
 def run_scan(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
              metrics: str = "chunk", on_step: Optional[Callable] = None,
-             start_round: int = 0, donate: bool = True) -> ExecResult:
+             start_round: int = 0, donate: bool = True,
+             snapshot=None, breaker=None) -> ExecResult:
     """One-shot convenience over :meth:`PlanExecutor.run_scan` (compiles
     fresh; hold a :class:`PlanExecutor` to reuse compiled chunks)."""
     return PlanExecutor(trainer, plan, donate=donate).run_scan(
         state, rounds_per_launch=rounds_per_launch, metrics=metrics,
-        on_step=on_step, start_round=start_round)
+        on_step=on_step, start_round=start_round,
+        snapshot=snapshot, breaker=breaker)
 
 
 def run_eager(trainer, plan: RunPlan, state, *,
@@ -601,11 +677,11 @@ def run_eager(trainer, plan: RunPlan, state, *,
 
 def run_grid(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
              metrics: str = "chunk", start_round: int = 0,
-             donate: bool = True) -> ExecResult:
+             donate: bool = True, snapshot=None) -> ExecResult:
     """One-shot convenience over :meth:`PlanExecutor.run_grid`."""
     return PlanExecutor(trainer, plan, donate=donate).run_grid(
         state, rounds_per_launch=rounds_per_launch, metrics=metrics,
-        start_round=start_round)
+        start_round=start_round, snapshot=snapshot)
 
 
 RUNTIMES = {"scan": run_scan, "eager": run_eager}

@@ -70,7 +70,11 @@ class RunPlan:
       levels); round q samples tokens from ``cdf_bank[cdf_index[q]]``,
     * ``grad_density`` — ``(rounds,)`` f32 keep-densities in (0, 1]:
       per-leaf magnitude top-k gradient sparsification applied inside the
-      train step (1.0 ⇒ exact no-op).
+      train step (1.0 ⇒ exact no-op),
+    * ``fault_gain`` — ``(rounds, n_groups)`` f32 per-worker loss-weight
+      gains from the fault transforms (``repro.faults``): 1.0 neutral,
+      huge-but-finite = corrupted receipt, NaN = poisoned receipt.  Only
+      participating workers' gains matter (the mask zeroes the rest).
     """
 
     masks: np.ndarray
@@ -86,6 +90,7 @@ class RunPlan:
     cdf_bank: Optional[np.ndarray] = None
     cdf_index: Optional[np.ndarray] = None
     grad_density: Optional[np.ndarray] = None
+    fault_gain: Optional[np.ndarray] = None
 
     @property
     def rounds(self) -> int:
@@ -151,6 +156,16 @@ class RunPlan:
             if np.any(self.grad_density <= 0) or \
                     np.any(self.grad_density > 1):
                 raise ValueError("grad_density values must be in (0, 1]")
+        if self.fault_gain is not None:
+            if self.fault_gain.shape != (self.rounds, self.n_groups):
+                raise ValueError(
+                    f"fault_gain must be (rounds={self.rounds}, "
+                    f"n_groups={self.n_groups}); got {self.fault_gain.shape}")
+            # NaN compares False everywhere, so this only rejects real zeros
+            if np.any(self.fault_gain == 0):
+                raise ValueError(
+                    "fault_gain must not contain zeros — drop workers via "
+                    "the availability channel, not a zero gain")
 
     # ------------------------------------------------------------------ views
     def device_slices(self, lo: int = 0, hi: Optional[int] = None):
@@ -179,7 +194,8 @@ class RunPlan:
                 "adaptive": self.adaptive, "n_grid": self.n_grid,
                 "n_cdf_phases": (0 if self.cdf_bank is None
                                  else int(self.cdf_bank.shape[0])),
-                "sparsified": self.grad_density is not None}
+                "sparsified": self.grad_density is not None,
+                "faulted": self.fault_gain is not None}
 
 
 def fold_data_keys(seed: int, rounds: int) -> np.ndarray:
@@ -235,6 +251,7 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
                  availability: Optional[np.ndarray] = None,
                  zipf_as: Optional[np.ndarray] = None,
                  grad_density: Optional[np.ndarray] = None,
+                 fault_gain: Optional[np.ndarray] = None,
                  n_cdf_phases: int = 8) -> RunPlan:
     """Lower ``(schedule, job)`` to a :class:`RunPlan`.
 
@@ -261,10 +278,12 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
       the participation masks (elastic hard-drop),
     * ``zipf_as`` — ``(rounds',)`` Zipf-exponent trajectory, quantised via
       :func:`quantize_zipf_trajectory` into ``cdf_bank``/``cdf_index``,
-    * ``grad_density`` — ``(rounds',)`` keep-densities in (0, 1].
+    * ``grad_density`` — ``(rounds',)`` keep-densities in (0, 1],
+    * ``fault_gain`` — ``(rounds', n)`` per-worker loss-weight gains
+      (``repro.faults``; NaN = poisoned receipt).
 
     Shorter channels than the plan's rounds are padded with their neutral
-    value (all-up / last exponent / density 1).
+    value (all-up / last exponent / density 1 / gain 1).
     """
     from ..data import DataConfig, HeterogeneousTokenPipeline
 
@@ -300,6 +319,18 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
             density = np.concatenate(
                 [density, np.ones(R - density.shape[0], np.float32)])
         density = density[:R]
+    gain = None
+    if fault_gain is not None:
+        gain = np.asarray(fault_gain, dtype=np.float32)
+        if gain.ndim != 2 or gain.shape[1] != masks.shape[1]:
+            raise ValueError(
+                f"fault_gain must be (rounds, n_workers="
+                f"{masks.shape[1]}); got {gain.shape}")
+        if gain.shape[0] < R:
+            gain = np.concatenate(
+                [gain, np.ones((R - gain.shape[0], gain.shape[1]),
+                               np.float32)])
+        gain = gain[:R]
     grid_scales = None
     if grid_gammas is not None:
         g = np.asarray([float(x) for x in grid_gammas], np.float32)
@@ -319,4 +350,5 @@ def compile_plan(schedule: Schedule, job, *, rounds: Optional[int] = None,
         group_perms=np.stack(pipe.perms).astype(np.int32),
         global_batch=job.global_batch, seq_len=job.seq_len,
         seed=seed, adaptive=adaptive, grid_scales=grid_scales,
-        cdf_bank=cdf_bank, cdf_index=cdf_index, grad_density=density)
+        cdf_bank=cdf_bank, cdf_index=cdf_index, grad_density=density,
+        fault_gain=gain)

@@ -37,6 +37,11 @@ from .report import (
     window_stats,
 )
 
+# importing repro.faults registers the fault transforms (nan_grad,
+# corrupt_receipt, worker_crash, host_preempt) into TRANSFORMS, so every
+# spec-string consumer knows the fault grammar without extra imports
+from .. import faults as _faults  # noqa: E402,F401  (registration side effect)
+
 __all__ = [
     "TRANSFORMS",
     "WorldTransform",

@@ -92,9 +92,16 @@ def window_stats(schedule: Schedule, n_windows: int = 4) -> list:
 def tau_report(schedule: Schedule, policy: str, *, n_windows: int = 4,
                constants: ProblemConstants | None = None,
                concurrency: int | None = None,
-               scenario_spec: str = "") -> dict:
+               scenario_spec: str = "",
+               evictions: dict | None = None,
+               timeouts: dict | None = None) -> dict:
     """Full report dict: global stats + per-window stats, each with the
-    matching Table-1 rate, plus the Koloskova sanity relations."""
+    matching Table-1 rate, plus the Koloskova sanity relations.
+
+    ``evictions`` / ``timeouts`` are the serving lane's degradation maps
+    (rid → decode step, from :class:`~repro.distributed.admission
+    .AdmissionTrace`): passed through under ``"degraded"`` so the rendered
+    report shows how many requests the pool quarantined or timed out."""
     c = constants or DEFAULT_CONSTANTS
     b = schedule.wait_b
     n = schedule.n_workers
@@ -120,6 +127,12 @@ def tau_report(schedule: Schedule, policy: str, *, n_windows: int = 4,
                                    tau_max=g_tau_max, b=b, n=n),
         },
         "windows": windows,
+        "degraded": {
+            "evictions": {int(k): int(v)
+                          for k, v in (evictions or {}).items()},
+            "timeouts": {int(k): int(v)
+                         for k, v in (timeouts or {}).items()},
+        },
         "koloskova": {
             # τ_avg ≤ τ_C always (Koloskova et al. 22, restated §3.1)
             "tau_avg_le_tau_c": bool(g_tau_avg <= g_tau_c + 1e-9),
@@ -148,6 +161,11 @@ def render_report(report: dict) -> str:
         span = f"[{w.lo},{w.hi})"
         lines.append(f"{span:>16} {w.tau_max:>8d} {w.tau_avg:>8.2f} "
                      f"{w.tau_c:>6d} {w.rate:>12.4g}")
+    deg = report.get("degraded") or {}
+    ev, to = deg.get("evictions") or {}, deg.get("timeouts") or {}
+    if ev or to:
+        lines.append(f"degraded: {len(ev)} evicted "
+                     f"(quarantine) · {len(to)} timed out")
     k = report["koloskova"]
     checks = [f"tau_avg<=tau_c: {'ok' if k['tau_avg_le_tau_c'] else 'VIOLATED'}"]
     if k["tau_c_le_concurrency"] is not None:

@@ -241,6 +241,12 @@ class ScenarioWorld:
     zipf_as: np.ndarray | None = None
     #: (rounds,) gradient keep-densities in (0, 1], or None
     grad_density: np.ndarray | None = None
+    #: (rounds, n) per-worker loss-weight gains (NaN = poisoned receipt),
+    #: or None when no fault transform injects gradient faults
+    fault_gain: np.ndarray | None = None
+    #: sorted round indices where the driver process is scheduled to be
+    #: preempted (host-level metadata — never lowered to device), or None
+    preempt_rounds: np.ndarray | None = None
 
 
 def realise_world(scenario: Scenario, scheduler: Scheduler,
@@ -289,6 +295,24 @@ def realise_world(scenario: Scenario, scheduler: Scheduler,
             # composing sparsifiers: the most aggressive density wins
             density = d if density is None else np.minimum(density, d)
 
+    gain = None
+    for tr in scenario.transforms:
+        g = tr.fault_gain()
+        if g is not None:
+            g = np.asarray(g, dtype=np.float32)[:n_rounds]
+            # gains compose multiplicatively; NaN absorbs (poison wins)
+            gain = g if gain is None else gain * g
+
+    preempts = []
+    for tr in scenario.transforms:
+        p = tr.preempt_rounds()
+        if p is not None and len(p):
+            preempts.append(np.asarray(p, dtype=np.int64))
+    preempt = (np.unique(np.concatenate(preempts)[
+        np.concatenate(preempts) < n_rounds]) if preempts else None)
+    if preempt is not None and preempt.size == 0:
+        preempt = None
+
     return ScenarioWorld(
         schedule=schedule,
         scenario=scenario,
@@ -296,4 +320,6 @@ def realise_world(scenario: Scenario, scheduler: Scheduler,
         availability=avail,
         zipf_as=zipf_as,
         grad_density=density,
+        fault_gain=gain,
+        preempt_rounds=preempt,
     )

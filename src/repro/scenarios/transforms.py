@@ -65,6 +65,19 @@ class WorldTransform:
         REALISED schedule so densities can key on actual delays."""
         return None
 
+    # ---- fault channels (repro.faults.transforms) --------------------------
+    def fault_gain(self) -> np.ndarray | None:
+        """(rounds, n) multiplicative gains on per-worker loss weights
+        (NaN = poisoned receipt), or None when the transform injects no
+        gradient faults."""
+        return None
+
+    def preempt_rounds(self) -> np.ndarray | None:
+        """(k,) round indices at which the DRIVER process is scheduled to
+        be preempted (host-level metadata, never lowered to device), or
+        None."""
+        return None
+
 
 class Identity(WorldTransform):
     """Explicit no-op — a wrapped world with only Identity transforms must

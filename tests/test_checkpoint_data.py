@@ -1,11 +1,21 @@
-"""Checkpointer round-trip + heterogeneous data pipeline properties."""
+"""Checkpointer round-trip + atomic-save durability + data pipeline.
+
+The durability half pins the crash contract: saves are atomic (temp file
++ ``os.replace``, state first, metadata last), so any observable
+checkpoint directory is either fully verifiable or detectably torn —
+``verify``/``restore`` must fail LOUDLY on truncation, digest mismatch,
+or missing halves, and the async snapshotter must skip such directories
+when picking a resume point."""
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import Mesh
 
-from repro.checkpoint import save, restore, load_meta
+from repro.checkpoint import (AsyncSnapshotter, CheckpointError, load_meta,
+                              restore, save, verify)
 from repro.configs import get_arch
 from repro.data import DataConfig, HeterogeneousTokenPipeline, EpochShuffler
 from repro.distributed import AsyncTrainer, AsyncConfig
@@ -33,6 +43,88 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
     save(str(tmp_path / "ck"), state)
     with pytest.raises(ValueError):
         restore(str(tmp_path / "ck"), {"w": jnp.ones((2, 3))})
+
+
+def test_checkpoint_save_is_atomic_and_verifiable(tmp_path):
+    """The save leaves exactly {state.npz, meta.json} (no temp litter),
+    meta records the state file's digest, and verify() passes."""
+    ck = str(tmp_path / "ck")
+    save(ck, {"w": jnp.arange(6.0).reshape(2, 3),
+              "b": jnp.ones((4,), jnp.bfloat16)}, step=3)
+    assert sorted(os.listdir(ck)) == ["meta.json", "state.npz"]
+    info = verify(ck)
+    assert info["step"] == 3
+    assert info["state_nbytes"] == os.path.getsize(
+        os.path.join(ck, "state.npz"))
+    assert len(info["state_sha256"]) == 64
+    assert len(info["keys"]) == 2
+
+
+def test_checkpoint_truncated_state_fails_loudly(tmp_path):
+    ck = str(tmp_path / "ck")
+    save(ck, {"w": jnp.ones((32, 32))})
+    sp = os.path.join(ck, "state.npz")
+    with open(sp, "r+b") as f:
+        f.truncate(os.path.getsize(sp) // 2)
+    with pytest.raises(CheckpointError, match="truncated|torn"):
+        verify(ck)
+    with pytest.raises(CheckpointError):
+        restore(ck, {"w": jnp.ones((32, 32))})
+
+
+def test_checkpoint_digest_mismatch_fails_loudly(tmp_path):
+    """Same-size corruption (a flipped byte — or a crash between the two
+    atomic renames pairing a fresh state with stale metadata) is caught
+    by the sha256, not the size check."""
+    ck = str(tmp_path / "ck")
+    save(ck, {"w": jnp.ones((32, 32))})
+    sp = os.path.join(ck, "state.npz")
+    with open(sp, "r+b") as f:
+        f.seek(os.path.getsize(sp) - 100)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(CheckpointError, match="sha256"):
+        verify(ck)
+    with pytest.raises(CheckpointError, match="sha256"):
+        restore(ck, {"w": jnp.ones((32, 32))})
+
+
+def test_checkpoint_missing_halves_fail_loudly(tmp_path):
+    ck = str(tmp_path / "ck")
+    save(ck, {"w": jnp.ones(3)})
+    os.remove(os.path.join(ck, "meta.json"))
+    with pytest.raises(CheckpointError, match="meta.json"):
+        verify(ck)
+    save(ck, {"w": jnp.ones(3)})
+    os.remove(os.path.join(ck, "state.npz"))
+    with pytest.raises(CheckpointError, match="state.npz"):
+        verify(ck)
+    # a leaf absent from the archive is a structure mismatch, not garbage
+    save(ck, {"w": jnp.ones(3)})
+    with pytest.raises(CheckpointError, match="absent"):
+        restore(ck, {"w": jnp.ones(3), "extra": jnp.ones(2)})
+
+
+def test_snapshotter_latest_skips_corrupt_dirs(tmp_path):
+    """Crash recovery: the newest snapshot directory may be the one torn
+    by the crash — latest() must fall back to the newest RESTORABLE one
+    (and ignore non-snapshot directory names entirely)."""
+    root = str(tmp_path / "snaps")
+    save(os.path.join(root, "round-00000004"), {"w": jnp.ones(3)}, step=4)
+    save(os.path.join(root, "round-00000008"), {"w": jnp.ones(3)}, step=8)
+    os.makedirs(os.path.join(root, "not-a-round"))
+    r, d = AsyncSnapshotter.latest(root)
+    assert r == 8 and d.endswith("round-00000008")
+    # tear the newest: truncate its state file
+    sp = os.path.join(root, "round-00000008", "state.npz")
+    with open(sp, "r+b") as f:
+        f.truncate(10)
+    r, d = AsyncSnapshotter.latest(root)
+    assert r == 4 and d.endswith("round-00000004")
+    # tear both → nothing restorable
+    os.remove(os.path.join(root, "round-00000004", "meta.json"))
+    assert AsyncSnapshotter.latest(root) is None
 
 
 def test_pipeline_heterogeneity_measurable():

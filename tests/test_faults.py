@@ -1,0 +1,501 @@
+"""Fault-tolerance suite: injected faults, guard rails, breaker, durability.
+
+The robustness contract, layer by layer:
+
+* fault transforms (``nan_grad`` / ``corrupt_receipt`` / ``worker_crash``
+  / ``host_preempt``) lower through the ordinary scenario grammar into
+  deterministic ``RunPlan`` channels — an injected-fault run still holds
+  scan ≡ eager parity (faults are data, not control flow),
+* the trainer's guard rails skip non-finite rounds IN-MASK (the compiled
+  program never branches to host) and back a faulty worker's effective
+  stepsize off and back via the per-worker health channel,
+* the :class:`~repro.faults.DivergenceBreaker` trips through the tap lane
+  and stops the executor from launching further chunks,
+* :class:`~repro.checkpoint.AsyncSnapshotter` gives the barrier-free
+  metric modes (``tap`` / ``none``) periodic durability: a resumed run —
+  including one whose writer process was SIGKILLed mid-run — is
+  bit-for-bit the uninterrupted run at chunk boundaries.
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro import checkpoint
+from repro.api import ExperimentSpec, TrainJob, TrainerBackend
+from repro.checkpoint import AsyncSnapshotter
+from repro.faults import (CorruptReceipt, DivergenceBreaker, GuardConfig,
+                          HostPreempt, NanGrad, WorkerCrash)
+from repro.runtime import METRICS, PlanExecutor, RunPlan, compile_plan
+from repro.scenarios import parse_scenario
+
+MICRO = (("n_layers", 1), ("d_model", 64), ("n_heads", 2), ("n_kv_heads", 1),
+         ("d_ff", 64), ("vocab", 97))
+
+TOL = dict(rtol=1e-5, atol=1e-7)
+
+
+def _job(**kw):
+    kw.setdefault("arch", "qwen2-0.5b")
+    kw.setdefault("global_batch", 8)
+    kw.setdefault("seq_len", 16)
+    kw.setdefault("arch_overrides", MICRO)
+    return TrainJob(**kw)
+
+
+def _spec(job, T=12, scenario=None, **kw):
+    kw.setdefault("stepsize", 3e-3)
+    return ExperimentSpec(scheduler="shuffled", timing="poisson:slow=6",
+                          objective=job, T=T, n_workers=4, seed=0,
+                          scenario=scenario, **kw)
+
+
+def _trainer(job, guards=None):
+    from jax.sharding import Mesh
+    from repro.distributed import AsyncTrainer, AsyncConfig
+    from repro.optim import OptConfig
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    tr = AsyncTrainer(
+        job.make_arch(), mesh,
+        opt=OptConfig(lr=3e-3, clip_norm=job.clip_norm,
+                      update_impl=job.update_impl),
+        async_cfg=AsyncConfig(delay_rounds=job.delay_rounds, guards=guards))
+    tr.n_groups = 4
+    return tr
+
+
+def _faulted_plan(job, spec):
+    """World + plan for a spec whose scenario carries fault transforms."""
+    world = TrainerBackend.world_for(spec, 4)
+    plan = compile_plan(world.schedule, job, rounds=spec.T, n_groups=4,
+                        seed=spec.seed, availability=world.availability,
+                        fault_gain=world.fault_gain)
+    return world, plan
+
+
+def _leaves(tr, state):
+    return [np.asarray(x, np.float32) for x in
+            jax.tree_util.tree_leaves(tr.params_of(state))]
+
+
+# ---------------------------------------------------------------------------
+# fault transforms: grammar, lowering, validation
+# ---------------------------------------------------------------------------
+def test_fault_spec_parses_and_lowers_into_plan_channels():
+    """The four fault names ride the ordinary scenario grammar and lower
+    into fault_gain / availability / preempt_rounds deterministically."""
+    spec_str = ("nan_grad:k=1,every=4,span=1;"
+                "corrupt_receipt:k=1,scale=1e4,every=6,span=1;"
+                "worker_crash:k=1,at=3,span=2;"
+                "host_preempt:at=8")
+    sc = parse_scenario(spec_str)
+    assert sc.names == ("nan_grad", "corrupt_receipt", "worker_crash",
+                        "host_preempt")
+    job = _job()
+    spec = _spec(job, T=12, scenario=spec_str)
+    world, plan = _faulted_plan(job, spec)
+
+    g = world.fault_gain
+    assert g.shape == (12, 4)
+    # windows start at j*every (round 0 stays clean — stationary start)
+    assert not np.isnan(g[0]).any() and np.all(g[0] == 1.0)
+    nan_rounds = sorted(set(np.where(np.isnan(g).any(axis=1))[0]))
+    assert nan_rounds == [4, 8]
+    big_rounds = sorted(set(np.where((g > 1.0).any(axis=1))[0]))
+    assert big_rounds == [6]
+    # worker_crash: one worker down for rounds [3, 5) via availability
+    avail = world.availability
+    assert avail.shape == (12, 4)
+    down = np.where(avail == 0)
+    assert sorted(set(down[0])) == [3, 4] and len(set(down[1])) == 1
+    assert np.all(plan.masks[avail == 0] == 0.0)    # hard-drop applied
+    # host_preempt is host metadata only — never a device channel
+    np.testing.assert_array_equal(world.preempt_rounds, [8])
+    assert plan.summary()["faulted"]
+    # realisation is deterministic: same seed → identical channels
+    world2, _ = _faulted_plan(job, spec)
+    np.testing.assert_array_equal(world2.fault_gain, g)
+    np.testing.assert_array_equal(world2.availability, avail)
+
+
+def test_fault_transform_and_guard_validation():
+    with pytest.raises(ValueError, match="nan_grad"):
+        NanGrad(k=0)
+    with pytest.raises(ValueError, match="scale"):
+        CorruptReceipt(scale=1.0)
+    with pytest.raises(ValueError, match="scale"):
+        CorruptReceipt(scale=np.inf)
+    with pytest.raises(ValueError, match="round 0"):
+        WorkerCrash(at=0)
+    with pytest.raises(ValueError, match="at"):
+        HostPreempt(at=0)
+    for bad in (dict(backoff=0.0), dict(backoff=1.0), dict(recover=0.99),
+                dict(min_scale=0.0), dict(min_scale=1.5),
+                dict(spike_norm=-1.0)):
+        with pytest.raises(ValueError):
+            GuardConfig(**bad)
+    with pytest.raises(ValueError, match="window"):
+        DivergenceBreaker(window=0)
+    with pytest.raises(ValueError, match="factor"):
+        DivergenceBreaker(factor=1.0)
+    # plan-level channel validation: zero gain is not a fault model (drop
+    # workers via the availability channel), wrong shape is rejected
+    job = _job()
+    spec = _spec(job, T=4)
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    base = compile_plan(schedule, job, rounds=4, n_groups=4, seed=0)
+    common = dict(masks=base.masks, delay_scales=base.delay_scales,
+                  data_keys=base.data_keys, token_cdf=base.token_cdf,
+                  group_perms=base.group_perms, global_batch=8, seq_len=16,
+                  seed=0)
+    with pytest.raises(ValueError, match="availability"):
+        RunPlan(fault_gain=np.zeros((4, 4), np.float32), **common)
+    with pytest.raises(ValueError, match="fault_gain"):
+        RunPlan(fault_gain=np.ones((3, 4), np.float32), **common)
+    assert not base.summary()["faulted"]
+
+
+def test_divergence_breaker_unit():
+    br = DivergenceBreaker(window=3, factor=2.0)
+    for i, l in enumerate([1.0, 1.0, 1.0]):       # best window = 1.0
+        assert not br.observe(i, l)
+    assert not br.observe(3, float("nan"))        # non-finite: ignored
+    assert not br.observe(4, float("inf"))
+    assert not br.tripped
+    # sliding window [1, 1, 10]: mean 4 > 2 × best(=1) → trips right away
+    assert br.observe(5, 10.0)
+    assert br.tripped and br.tripped_round == 5
+    assert br.observe(8, 1.0)                     # latched
+
+
+# ---------------------------------------------------------------------------
+# guard rails: skip-in-mask, backoff/recovery, scan ≡ eager under faults
+# ---------------------------------------------------------------------------
+NAN_WORLD = "nan_grad:k=2,every=4,span=1"
+
+
+def test_guarded_faulted_plan_scan_matches_eager():
+    """Injected-fault runs keep the executor contract: the guard is part
+    of the compiled step, so scan ≡ eager on every metric — including the
+    skipped/gscale guard channels — and the final params agree."""
+    job = _job()
+    spec = _spec(job, T=12, scenario=NAN_WORLD)
+    _, plan = _faulted_plan(job, spec)
+    tr = _trainer(job, guards=GuardConfig())
+    from repro.runtime import run_eager, run_scan
+
+    r_e = run_eager(tr, plan, tr.init_state(jax.random.PRNGKey(0)))
+    r_s = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=5)            # ragged: 5 + 5 + 2
+    for k in METRICS:
+        np.testing.assert_allclose(r_s.metrics[k], r_e.metrics[k], **TOL,
+                                   err_msg=f"faulted metric {k}")
+    for a, b in zip(_leaves(tr, r_e.state), _leaves(tr, r_s.state)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+    # a skip fires exactly when a poisoned worker actually participates
+    poisoned = (np.isnan(plan.fault_gain) & (plan.masks > 0)).any(axis=1)
+    np.testing.assert_array_equal(r_s.metrics["skipped"],
+                                  poisoned.astype(np.float32))
+    assert poisoned.any()                          # the world actually bit
+
+
+def test_guard_skips_poison_where_unguarded_diverges():
+    job = _job()
+    spec = _spec(job, T=12, scenario=NAN_WORLD)
+    _, plan = _faulted_plan(job, spec)
+    from repro.runtime import run_scan
+
+    tr_u = _trainer(job)                           # no guards
+    r_u = run_scan(tr_u, plan, tr_u.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=4)
+    assert not all(np.isfinite(l).all() for l in _leaves(tr_u, r_u.state)), \
+        "unguarded run should be poisoned by the NaN receipts"
+    # unguarded trainers report neutral guard channels
+    np.testing.assert_array_equal(r_u.metrics["skipped"], np.zeros(12))
+    np.testing.assert_array_equal(r_u.metrics["gscale"], np.ones(12))
+
+    tr_g = _trainer(job, guards=GuardConfig())
+    r_g = run_scan(tr_g, plan, tr_g.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=4)
+    assert all(np.isfinite(l).all() for l in _leaves(tr_g, r_g.state)), \
+        "guarded params must stay finite through the same faults"
+    # clean-round metrics stay finite; only the skipped rounds report the
+    # poisoned (never-applied) loss
+    skipped = r_g.metrics["skipped"].astype(bool)
+    assert skipped.any()
+    assert np.isfinite(r_g.metrics["loss"][~skipped]).all()
+    # health backoff is observable: gscale < 1 can only come from a
+    # backed-off worker participating again, which happens strictly after
+    # the first skip (gscale reports pre-update health, so the skip round
+    # itself still shows 1.0)
+    gscale = r_g.metrics["gscale"]
+    first_skip = int(np.argmax(skipped))
+    assert gscale.min() < 1.0
+    assert int(np.argmin(gscale)) > first_skip
+    np.testing.assert_array_equal(gscale[:first_skip + 1],
+                                  np.ones(first_skip + 1))
+
+
+def test_health_backoff_and_recovery_deterministic():
+    """Pin the health dynamics exactly: all workers participate every
+    round, worker 0's receipt is poisoned at round 1 only.  Every
+    participant of the bad round is charged (health is per-participant —
+    blame is not attributable below round granularity), so gscale (the
+    participation-weighted mean of pre-round health) follows the shared
+    ×0.5 backoff then ×1.25-per-clean-round recovery trajectory."""
+    import dataclasses
+
+    job = _job()
+    spec = _spec(job, T=8)
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    base = compile_plan(schedule, job, rounds=8, n_groups=4, seed=0)
+    gain = np.ones((8, 4), np.float32)
+    gain[1, 0] = np.nan
+    plan = dataclasses.replace(base, masks=np.ones((8, 4), np.float32),
+                               fault_gain=gain)
+    tr = _trainer(job, guards=GuardConfig())     # backoff .5, recover 1.25
+    from repro.runtime import run_scan
+
+    r = run_scan(tr, plan, tr.init_state(jax.random.PRNGKey(0)),
+                 rounds_per_launch=4)
+    np.testing.assert_array_equal(
+        r.metrics["skipped"], [0, 1, 0, 0, 0, 0, 0, 0])
+    h = [1.0, 1.0, 0.5, 0.625, 0.78125, 0.9765625, 1.0, 1.0]
+    np.testing.assert_allclose(
+        r.metrics["gscale"], h, rtol=1e-6,
+        err_msg="health backoff/recovery trajectory")
+    # the per-worker channel lands in the state: everyone fully recovered
+    np.testing.assert_allclose(
+        np.asarray(r.state["guard"]["health"]), np.ones(4), rtol=1e-6)
+
+
+def test_guards_are_noop_on_a_clean_world():
+    """On a fault-free plan the guard rails must not change the math:
+    every metric matches the unguarded trainer bit-for-tolerance, health
+    stays at 1, nothing is skipped."""
+    job = _job()
+    spec = _spec(job, T=6)
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    plan = compile_plan(schedule, job, rounds=6, n_groups=4, seed=0)
+    from repro.runtime import run_scan
+
+    tr_u = _trainer(job)
+    r_u = run_scan(tr_u, plan, tr_u.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=3)
+    tr_g = _trainer(job, guards=GuardConfig())
+    r_g = run_scan(tr_g, plan, tr_g.init_state(jax.random.PRNGKey(0)),
+                   rounds_per_launch=3)
+    for k in METRICS:
+        np.testing.assert_allclose(r_g.metrics[k], r_u.metrics[k], **TOL,
+                                   err_msg=f"clean-world metric {k}")
+    np.testing.assert_array_equal(r_g.metrics["skipped"], np.zeros(6))
+    np.testing.assert_array_equal(r_g.metrics["gscale"], np.ones(6))
+
+
+# ---------------------------------------------------------------------------
+# divergence breaker through the tap lane
+# ---------------------------------------------------------------------------
+def test_breaker_trips_through_tap_and_truncates_curves():
+    """Garbage-but-finite receipts (corrupt_receipt) spike the loss; the
+    breaker watching the tap lane trips and the executor stops launching
+    — curves cover exactly the rounds actually launched."""
+    job = _job()
+    spec = _spec(job, T=24, scenario="corrupt_receipt:k=3,scale=1e4,"
+                                     "every=4,span=2")
+    _, plan = _faulted_plan(job, spec)
+    tr = _trainer(job)                             # unguarded: loss spikes
+    br = DivergenceBreaker(window=3, factor=5.0)
+    ex = PlanExecutor(tr, plan)
+    r = ex.run_scan(tr.init_state(jax.random.PRNGKey(0)),
+                    rounds_per_launch=4, metrics="tap", breaker=br)
+    assert r.stats.tripped_round is not None
+    assert br.tripped
+    n = len(r.metrics["loss"])
+    # truncation: whole chunks only, covering at least the trip round
+    assert n % 4 == 0 and r.stats.tripped_round < n <= 24
+    assert r.tap_events == n and r.launches == n // 4
+    # the spike the breaker saw is real
+    assert r.metrics["loss"].max() > 5.0 * r.metrics["loss"].min()
+    # breaker is tap-only: chunk/none never stream per-round losses
+    with pytest.raises(ValueError, match="tap"):
+        ex.run_scan(tr.init_state(jax.random.PRNGKey(0)),
+                    metrics="chunk", breaker=DivergenceBreaker())
+
+
+# ---------------------------------------------------------------------------
+# barrier-free durability: async snapshots + resume
+# ---------------------------------------------------------------------------
+def test_snapshotter_validation_and_cadence():
+    with pytest.raises(ValueError, match="cadence"):
+        AsyncSnapshotter("/tmp/x", 0)
+    with pytest.raises(ValueError, match="keep"):
+        AsyncSnapshotter("/tmp/x", 4, keep=0)
+    s = AsyncSnapshotter("/tmp/x", 4)
+    assert s.due(4, 12) and s.due(8, 12) and s.due(12, 12)
+    assert not s.due(6, 12)
+    assert s.due(10, 10)                  # final boundary is always due
+    assert AsyncSnapshotter.latest("/tmp/definitely-not-a-dir") is None
+
+
+@pytest.mark.parametrize("metrics", ["none", "tap"])
+def test_async_snapshot_resume_is_bitwise_at_chunk_boundary(tmp_path,
+                                                            metrics):
+    """The fast metric transports get durability with zero mid-run
+    barriers: restore the newest snapshot, resume at its boundary, and
+    the final state is BIT-FOR-BIT the uninterrupted run's."""
+    job = _job()
+    spec = _spec(job, T=12)
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    plan = compile_plan(schedule, job, rounds=12, n_groups=4, seed=0)
+    tr = _trainer(job, guards=GuardConfig())
+    ex = PlanExecutor(tr, plan)
+
+    snapdir = str(tmp_path / f"snaps-{metrics}")
+    snap = AsyncSnapshotter(snapdir, 4, keep=2, meta={"arch": "micro"})
+    full = ex.run_scan(tr.init_state(jax.random.PRNGKey(0)),
+                       rounds_per_launch=4, metrics=metrics, snapshot=snap)
+    assert full.stats.snapshots == 3              # boundaries 4, 8, 12
+    assert full.stats.host_syncs == 0             # still barrier-free
+    # keep=2 pruning: only the newest two survive
+    dirs = sorted(d for d in os.listdir(snapdir) if d.startswith("round-"))
+    assert dirs == ["round-00000008", "round-00000012"]
+    r, latest = AsyncSnapshotter.latest(snapdir)
+    assert r == 12 and latest.endswith("round-00000012")
+    meta = checkpoint.load_meta(latest)
+    assert meta["kind"] == "snapshot" and meta["round"] == 12
+    assert meta["arch"] == "micro"
+
+    # resume from the MID-RUN snapshot (round 8), not the final one
+    restored = checkpoint.restore(os.path.join(snapdir, "round-00000008"),
+                                  tr.abstract_state(),
+                                  shardings=tr.state_shardings())
+    assert int(restored["step"]) == 8
+    tail = ex.run_scan(restored, rounds_per_launch=4, metrics=metrics,
+                       start_round=8)
+    assert tail.launches == 1
+    for a, b in zip(jax.tree_util.tree_leaves(full.state),
+                    jax.tree_util.tree_leaves(tail.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+#: the crash-resume world the SIGKILL gate trains (importable by the
+#: child process, so writer and resumer build the identical program)
+CRASH_T = 24
+CRASH_K = 4
+
+
+def _crash_setup():
+    job = _job()
+    spec = _spec(job, T=CRASH_T, scenario=NAN_WORLD)
+    _, plan = _faulted_plan(job, spec)
+    tr = _trainer(job, guards=GuardConfig())
+    return tr, plan
+
+
+def _crash_child_main(snapdir):                    # pragma: no cover
+    tr, plan = _crash_setup()
+    snap = AsyncSnapshotter(snapdir, CRASH_K, keep=3)
+    ex = PlanExecutor(tr, plan)
+
+    def throttle(i, st, m):                        # ~0.25 s per round: the
+        time.sleep(0.25)                           # parent kills mid-run
+
+    ex.run_scan(tr.init_state(jax.random.PRNGKey(0)),
+                rounds_per_launch=CRASH_K, metrics="tap",
+                on_step=throttle, snapshot=snap)
+    print("FINISHED", flush=True)
+
+
+def test_sigkill_crash_resume_gate(tmp_path):
+    """The durability acceptance gate: a subprocess training with async
+    tap-mode snapshots is SIGKILLed mid-chunk; this process restores the
+    newest restorable snapshot and resumes — the result is bit-for-bit
+    the uninterrupted run."""
+    snapdir = str(tmp_path / "crash-snaps")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH", ""),
+                    os.path.dirname(os.path.abspath(__file__))) if p)
+    child = subprocess.Popen(
+        [sys.executable, "-c",
+         "import sys; from test_faults import _crash_child_main; "
+         "_crash_child_main(sys.argv[1])", snapdir],
+        env=env, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))),
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    try:
+        # wait for the first RESTORABLE snapshot, then kill -9 mid-run
+        deadline = time.time() + 300
+        found = None
+        while time.time() < deadline:
+            if child.poll() is not None:
+                break
+            found = AsyncSnapshotter.latest(snapdir)
+            if found is not None:
+                break
+            time.sleep(0.05)
+        assert found is not None, (
+            "child produced no snapshot before finishing/deadline:\n"
+            + child.communicate()[1])
+        child.send_signal(signal.SIGKILL)
+        child.wait(timeout=60)
+    finally:
+        if child.poll() is None:
+            child.kill()
+            child.wait(timeout=60)
+    out = (child.stdout.read() or "") if child.stdout else ""
+    assert "FINISHED" not in out, "child finished before the kill landed"
+
+    r, latest = AsyncSnapshotter.latest(snapdir)
+    assert 0 < r < CRASH_T, f"kill was not mid-run (snapshot round {r})"
+    assert r % CRASH_K == 0                        # chunk boundary
+
+    tr, plan = _crash_setup()
+    ex = PlanExecutor(tr, plan)
+    full = ex.run_scan(tr.init_state(jax.random.PRNGKey(0)),
+                       rounds_per_launch=CRASH_K, metrics="none")
+    restored = checkpoint.restore(latest, tr.abstract_state(),
+                                  shardings=tr.state_shardings())
+    assert int(restored["step"]) == r
+    resumed = ex.run_scan(restored, rounds_per_launch=CRASH_K,
+                          metrics="none", start_round=r)
+    for a, b in zip(jax.tree_util.tree_leaves(full.state),
+                    jax.tree_util.tree_leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the guarded run survived its injected NaN rounds
+    assert all(np.isfinite(l).all() for l in _leaves(tr, resumed.state))
+
+
+# ---------------------------------------------------------------------------
+# backend wiring: guards + snapshots + breaker through repro.api
+# ---------------------------------------------------------------------------
+def test_backend_threads_guards_snapshots_and_faults(tmp_path):
+    """End-to-end through ``repro.api``: a TrainJob with guards=True on a
+    faulted world trains finite, reports the snapshot count, and matches
+    the eager oracle."""
+    job = _job(guards=True)
+    spec = _spec(job, T=8, scenario=NAN_WORLD,
+                 runtime="scan", rounds_per_launch=4)
+    snap = AsyncSnapshotter(str(tmp_path / "be-snaps"), 4)
+    res = TrainerBackend(snapshot=snap).run(spec)
+    assert res.extra["snapshots"] == 2
+    assert res.extra["tripped_round"] is None
+    assert np.isfinite(res.losses[np.array(
+        [m["skipped"] for m in res.extra["metrics"]]) == 0.0]).all()
+    res_e = TrainerBackend(runtime="eager").run(spec)
+    np.testing.assert_allclose(
+        res.losses, res_e.losses, **TOL)
+    # breaker threading: tap-mode backend accepts one and reports the trip
+    br = DivergenceBreaker(window=2, factor=2.0)
+    spec2 = _spec(_job(), T=8, scenario="corrupt_receipt:k=3,scale=1e4,"
+                                        "every=2,span=1",
+                  runtime="scan", rounds_per_launch=2, metrics="tap")
+    res2 = TrainerBackend(breaker=br).run(spec2)
+    assert res2.extra["tripped_round"] == br.tripped_round
+    assert br.tripped

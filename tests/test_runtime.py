@@ -507,6 +507,79 @@ def test_checkpoint_resume_parity_pooled(tmp_path):
                                    **TOL, err_msg=f"resumed {k}")
 
 
+def test_run_grid_snapshot_resume_midgrid(tmp_path):
+    """Resume edge case 1: a γ-grid run snapshotted mid-run by the async
+    snapshotter restores as the already-STACKED carry and resumes ≡ the
+    uninterrupted grid run (curves and final stacked states)."""
+    from repro import checkpoint
+    from repro.checkpoint import AsyncSnapshotter
+
+    job = _job()
+    spec = _spec(job, T=4)
+    gplan = _grid_plan_for(spec, job)
+    tr = _trainer(job)
+    ex = PlanExecutor(tr, gplan, donate=False)
+    snapdir = str(tmp_path / "grid-snaps")
+    snap = AsyncSnapshotter(snapdir, 2, keep=4)
+    full = ex.run_grid(tr.init_state(jax.random.PRNGKey(0)),
+                       rounds_per_launch=2, snapshot=snap)
+    assert full.stats.snapshots == 2              # boundaries 2 and 4
+
+    # the stacked template gives restore the (n_grid, ...) structure
+    template = ex.stack_state(tr.init_state(jax.random.PRNGKey(0)))
+    restored = checkpoint.restore(str(tmp_path / "grid-snaps" /
+                                      "round-00000002"), template)
+    np.testing.assert_array_equal(np.asarray(restored["step"]),
+                                  np.full(4, 2))
+    tail = ex.run_grid(restored, rounds_per_launch=2, start_round=2)
+    assert tail.metrics["loss"].shape == (4, 2)
+    np.testing.assert_allclose(tail.metrics["loss"],
+                               full.metrics["loss"][:, 2:], **TOL)
+    for a, b in zip(jax.tree_util.tree_leaves(full.state),
+                    jax.tree_util.tree_leaves(tail.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_resume_after_final_chunk_is_noop():
+    """Resume edge case 2: ``start_round == rounds`` (a run restored from
+    its FINAL snapshot) is an exact no-op on every lane — zero launches,
+    empty curves, the carry handed back untouched."""
+    job = _job()
+    spec = _spec(job, T=4)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    ex = PlanExecutor(tr, plan, donate=False)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    done = ex.run_scan(state, rounds_per_launch=2).state
+
+    for metrics in ("chunk", "tap", "none"):
+        r = ex.run_scan(done, rounds_per_launch=2, metrics=metrics,
+                        start_round=4)
+        assert r.launches == 0 and r.host_syncs == 0 and r.tap_events == 0
+        if metrics == "none":
+            assert r.metrics == {}
+        else:
+            assert all(len(v) == 0 for v in r.metrics.values())
+        for a, b in zip(jax.tree_util.tree_leaves(done),
+                        jax.tree_util.tree_leaves(r.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    r_e = ex.run_eager(done, start_round=4)
+    assert r_e.launches == 0
+    assert all(len(v) == 0 for v in r_e.metrics.values())
+
+    gex = PlanExecutor(tr, _grid_plan_for(spec, job), donate=False)
+    gdone = gex.run_grid(tr.init_state(jax.random.PRNGKey(0)),
+                         rounds_per_launch=2)
+    rg = gex.run_grid(gdone.state, rounds_per_launch=2, start_round=4)
+    assert rg.launches == 0 and rg.metrics == {}
+    for a, b in zip(jax.tree_util.tree_leaves(gdone.state),
+                    jax.tree_util.tree_leaves(rg.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ---------------------------------------------------------------------------
 # TrainerBackend wiring
 # ---------------------------------------------------------------------------

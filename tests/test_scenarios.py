@@ -72,7 +72,9 @@ def test_parse_errors_are_valueerrors():
 
 def test_registry_names_match_classes():
     assert set(TRANSFORMS) == {"identity", "drift", "straggler", "elastic",
-                               "data_drift", "sparsify"}
+                               "data_drift", "sparsify", "nan_grad",
+                               "corrupt_receipt", "worker_crash",
+                               "host_preempt"}
     for name, cls in TRANSFORMS.items():
         assert cls.name == name
 

@@ -229,6 +229,113 @@ def test_serve_job_validates_slot_fields():
 
 
 # ---------------------------------------------------------------------------
+# degradation: per-slot sampling, quarantine, deadlines
+# ---------------------------------------------------------------------------
+
+def test_sampled_streams_independent_of_pool_width():
+    """Per-request PRNG: each request's sampled token stream is a pure
+    function of (server seed, request id) — folding the slot out of the
+    key — so the SAME requests decode the SAME tokens whether the pool
+    has 1 slot or 2, and distinct requests get distinct streams."""
+    cfg, params = _setup()
+    prompts = _prompts(4, 5, cfg.vocab, seed=7)
+    res = {}
+    for n_slots in (1, 2):
+        srv = SlotServer(cfg, _mesh(), SlotConfig(
+            n_slots=n_slots, ctx_len=16, steps_per_launch=2,
+            temperature=0.8, seed=11))
+        res[n_slots] = srv.serve(params, prompts, 6)
+        counts = srv.compile_counts()
+        assert counts["chunk"] == 1 and counts["admit"] == 1, counts
+    np.testing.assert_array_equal(res[1].tokens, res[2].tokens)
+    # independence: no two requests share a stream (keys fold in the rid)
+    toks = res[2].tokens
+    for a in range(4):
+        for b in range(a + 1, 4):
+            assert not np.array_equal(toks[a, 1:], toks[b, 1:]), (a, b)
+    # a different server seed moves the streams
+    srv3 = SlotServer(cfg, _mesh(), SlotConfig(
+        n_slots=2, ctx_len=16, steps_per_launch=2, temperature=0.8,
+        seed=12))
+    assert not np.array_equal(srv3.serve(params, prompts, 6).tokens, toks)
+
+
+def test_quarantine_evicts_nonfinite_lanes():
+    """Slots whose logits go non-finite are quarantined in-mask: the lane
+    freezes, the request is marked evicted (its unfilled token budget is
+    ``-1``), and the degradation surfaces in the trace and tau_report."""
+    cfg, params = _setup()
+    # poison the params: every forward produces NaN logits
+    bad = jax.tree_util.tree_map(lambda x: jnp.full_like(x, np.nan), params)
+    srv = SlotServer(cfg, _mesh(), SlotConfig(n_slots=2, ctx_len=16,
+                                              steps_per_launch=2))
+    prompts = _prompts(3, 5, cfg.vocab)
+    res = srv.serve(bad, prompts, 5, arrivals=np.array([0, 0, 4]))
+    assert sorted(res.evictions) == [0, 1, 2]     # every lane quarantined
+    assert res.timeouts == {}
+    # decode tokens after the eviction step are the -1 sentinel
+    assert np.all(res.tokens[:, 1:] == -1)
+    assert res.tokens.shape == (3, 5)
+    rep = tau_report(res.schedule, "pure", evictions=res.evictions,
+                     timeouts=res.timeouts)
+    assert rep["degraded"]["evictions"] == {
+        int(k): int(v) for k, v in res.evictions.items()}
+    from repro.scenarios import render_report
+    assert "evicted (quarantine)" in render_report(rep)
+    # a healthy pool on the same instance: no evictions, compile reused
+    ok = srv.serve(params, prompts, 5)
+    assert ok.evictions == {} and np.all(ok.tokens >= 0)
+    assert srv.compile_counts()["chunk"] == 1
+
+
+def test_deadline_times_out_queued_requests():
+    """Requests whose queue wait exceeds the deadline are cancelled at an
+    admission sweep: never admitted, tokens all ``-1``, ttft ``-1``, and
+    the remaining requests still serve to completion."""
+    cfg, params = _setup()
+    srv = SlotServer(cfg, _mesh(), SlotConfig(n_slots=1, ctx_len=16,
+                                              steps_per_launch=2))
+    prompts = _prompts(4, 5, cfg.vocab)
+    res = srv.serve(params, prompts, 4, deadline=2)
+    assert res.timeouts, "a 1-slot pool at deadline=2 must shed load"
+    assert res.evictions == {}
+    served = sorted(set(range(4)) - set(res.timeouts))
+    assert served, "the head of the queue must still be served"
+    for r in res.timeouts:
+        assert np.all(res.tokens[r] == -1)
+        assert res.ttft_steps[r] == -1
+    for r in served:
+        assert np.all(res.tokens[r] >= 0)
+        assert res.ttft_steps[r] >= 0
+    # the Schedule rows cover exactly the served requests
+    assert sorted(res.schedule.workers.tolist()) == served
+    rep = tau_report(res.schedule, "pure", evictions=res.evictions,
+                     timeouts=res.timeouts)
+    assert rep["degraded"]["timeouts"] == {
+        int(k): int(v) for k, v in res.timeouts.items()}
+    from repro.scenarios import render_report
+    assert "timed out" in render_report(rep)
+    with pytest.raises(ValueError, match="deadline"):
+        srv.serve(params, prompts, 4, deadline=-1)
+
+
+def test_serve_job_deadline_validation_and_backend_surface():
+    with pytest.raises(ValueError, match="deadline"):
+        ServeJob(deadline=-1, n_slots=2)
+    with pytest.raises(ValueError, match="deadline"):
+        ServeJob(deadline=4)                      # needs the slot lane
+    res = ServeBackend(mesh=_mesh()).run(ExperimentSpec(
+        objective=ServeJob(batch=2, prompt_len=5, arch_overrides=TINY_OVR,
+                           n_slots=1, n_requests=3, deadline=1,
+                           steps_per_launch=2),
+        T=4, seed=0))
+    assert res.extra["timeouts"], "deadline=1 on a 1-slot pool must shed"
+    assert res.extra["evictions"] == {}
+    deg = res.extra["tau_report"]["degraded"]
+    assert deg["timeouts"] == res.extra["timeouts"]
+
+
+# ---------------------------------------------------------------------------
 # admission layer units
 # ---------------------------------------------------------------------------
 
