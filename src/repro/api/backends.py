@@ -18,6 +18,7 @@ All three return a :class:`RunResult`.
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from typing import Callable, Optional, Protocol, runtime_checkable
 
 import jax
@@ -139,7 +140,7 @@ class TrainerBackend:
                  runtime: Optional[str] = None,
                  rounds_per_launch: Optional[int] = None,
                  metrics: Optional[str] = None,
-                 snapshot=None, breaker=None):
+                 snapshot=None, breaker=None, recorder=None):
         self.mesh = mesh
         self.rules = rules
         self.on_step = on_step
@@ -148,6 +149,7 @@ class TrainerBackend:
         self.metrics = metrics
         self.snapshot = snapshot
         self.breaker = breaker
+        self.recorder = recorder      # repro.obs.Recorder | None
 
     # ---- pieces shared with tests -----------------------------------------
     @staticmethod
@@ -268,9 +270,12 @@ class TrainerBackend:
             kw = {"snapshot": self.snapshot, "breaker": self.breaker}
         exec_res = execute(tr, plan, state, runtime=runtime,
                            rounds_per_launch=rounds_per_launch,
-                           metrics=metrics, on_step=self.on_step, **kw)
+                           metrics=metrics, on_step=self.on_step,
+                           recorder=self.recorder, **kw)
 
         have_curves = bool(exec_res.metrics)
+        obs = self.recorder.summary(rounds=rounds) \
+            if self.recorder is not None else None
         return RunResult(
             spec=spec, backend=self.name, x=exec_res.state,
             log_ts=np.arange(rounds),
@@ -293,7 +298,8 @@ class TrainerBackend:
                    "host_syncs": exec_res.host_syncs,
                    "tap_events": exec_res.tap_events,
                    "snapshots": exec_res.stats.snapshots,
-                   "tripped_round": exec_res.stats.tripped_round})
+                   "tripped_round": exec_res.stats.tripped_round,
+                   "obs": obs})
 
     def _run_grid(self, spec: ExperimentSpec, job: TrainJob) -> RunResult:
         """All grid γ points in one vmapped scan program (the plan's
@@ -319,7 +325,7 @@ class TrainerBackend:
                             grad_density=world.grad_density,
                             fault_gain=world.fault_gain)
         _, rounds_per_launch, _ = self.resolve_runtime(spec)
-        ex = PlanExecutor(tr, plan)
+        ex = PlanExecutor(tr, plan, recorder=self.recorder)
         # scoring needs curves, so the grid lane always reads them back
         # (one deferred sync for the whole grid)
         res = ex.run_grid(tr.init_state(jax.random.PRNGKey(spec.seed)),
@@ -356,7 +362,11 @@ class TrainerBackend:
                    "metrics_mode": "chunk",
                    "launches": res.launches,
                    "host_syncs": res.host_syncs,
-                   "tap_events": res.tap_events})
+                   "tap_events": res.tap_events,
+                   "snapshots": res.stats.snapshots,
+                   "tripped_round": res.stats.tripped_round,
+                   "obs": self.recorder.summary(rounds=rounds)
+                   if self.recorder is not None else None})
 
 
 class ServeBackend:
@@ -372,9 +382,10 @@ class ServeBackend:
 
     name = "serve"
 
-    def __init__(self, mesh=None, rules=None):
+    def __init__(self, mesh=None, rules=None, recorder=None):
         self.mesh = mesh
         self.rules = rules
+        self.recorder = recorder      # repro.obs.Recorder | None
 
     def _setup(self, spec: ExperimentSpec):
         import jax
@@ -400,6 +411,7 @@ class ServeBackend:
         from ..models import prefill
 
         t0 = time.time()
+        rec = self.recorder
         job, cfg, mesh, rules, params = self._setup(spec)
         ctx = job.prompt_len + spec.T
         server = Server(cfg, mesh, ServeConfig(batch=job.batch, ctx_len=ctx,
@@ -407,19 +419,27 @@ class ServeBackend:
                                                seed=spec.seed), rules=rules)
         prompts = np.random.default_rng(spec.seed).integers(
             0, cfg.vocab, (job.batch, job.prompt_len)).astype(np.int32)
-        last, cache = prefill(cfg, params, {"tokens": jnp.asarray(prompts)},
-                              ctx_len=ctx)
-        toks = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        with (rec.span("prefill", "server", batch=job.batch,
+                       plen=job.prompt_len)
+              if rec is not None else nullcontext()):
+            last, cache = prefill(cfg, params,
+                                  {"tokens": jnp.asarray(prompts)},
+                                  ctx_len=ctx)
+            toks = jnp.argmax(last, axis=-1).astype(jnp.int32)
         t_dec = time.time()
-        gen = server.generate(params, np.asarray(toks), spec.T - 1,
-                              start_pos=job.prompt_len, cache=cache)
+        with (rec.span("decode", "server", steps=spec.T - 1)
+              if rec is not None else nullcontext()):
+            gen = server.generate(params, np.asarray(toks), spec.T - 1,
+                                  start_pos=job.prompt_len, cache=cache)
         gen = np.concatenate([np.asarray(toks)[:, None], gen], axis=1)
         dt = time.time() - t_dec
         return RunResult(
             spec=spec, backend=self.name, x=gen, seconds=time.time() - t0,
             extra={"prompts": prompts, "arch": cfg.name,
                    "decode_seconds": dt,
-                   "tok_per_s": job.batch * (spec.T - 1) / max(dt, 1e-9)})
+                   "tok_per_s": job.batch * (spec.T - 1) / max(dt, 1e-9),
+                   "obs": rec.summary(rounds=spec.T)
+                   if rec is not None else None})
 
     def _run_slots(self, spec: ExperimentSpec) -> RunResult:
         """Continuous batching: ``n_requests`` requests through ``n_slots``
@@ -438,7 +458,7 @@ class ServeBackend:
             SlotConfig(n_slots=job.n_slots, ctx_len=ctx,
                        temperature=job.temperature, seed=spec.seed,
                        steps_per_launch=job.steps_per_launch),
-            rules=rules)
+            rules=rules, recorder=self.recorder)
         # same prompt stream as the lock-step oracle (first batch rows
         # coincide when n_requests == batch — the parity gate relies on it)
         prompts = np.random.default_rng(spec.seed).integers(
@@ -461,6 +481,8 @@ class ServeBackend:
                    "decode_steps": res.decode_steps, "chunks": res.chunks,
                    "tap_rows": res.tap_rows,
                    "evictions": res.evictions, "timeouts": res.timeouts,
+                   "obs": self.recorder.summary(rounds=res.decode_steps)
+                   if self.recorder is not None else None,
                    "tau_report": tau_report(
                        res.schedule, parse_admission(job.admission)[0],
                        concurrency=job.n_slots,

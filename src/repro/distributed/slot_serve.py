@@ -47,6 +47,7 @@ fresh closure per call would silently recompile every run), asserted by
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Callable, Optional, Union
 
 import jax
@@ -56,8 +57,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
 from ..models import model as M
+from ..obs import CompileWatch
 from .admission import AdmissionPolicy, AdmissionTrace, parse_admission
 from .sharding import Rules, DEFAULT_RULES, sharded_trace, tree_shardings
+
+
+def _span(rec, name, lane, **args):
+    """Optional-recorder span (no-op without one — un-observed serves
+    pay nothing on the dispatch path)."""
+    return rec.span(name, lane, **args) if rec is not None else nullcontext()
 
 
 @dataclasses.dataclass
@@ -108,12 +116,14 @@ class SlotServer:
     """Continuous-batching decode over ``n_slots`` ragged lanes."""
 
     def __init__(self, cfg: ArchConfig, mesh: Mesh, slots: SlotConfig,
-                 rules: Rules = DEFAULT_RULES):
+                 rules: Rules = DEFAULT_RULES, recorder=None):
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError(
                 f"slot serving admits token-only prompts; the {cfg.family!r} "
                 "family needs per-request modality inputs (follow-up)")
         self.cfg, self.mesh, self.slots, self.rules = cfg, mesh, slots, rules
+        self.recorder = recorder      # repro.obs.Recorder | None
+        self.watch = CompileWatch(recorder)   # retrace sentinel
         self._chunk_fn = None         # cached jitted chunk program
         self._admit_fn = None         # cached jitted slot writer
         self._prefill_jits = {}       # prompt_len -> jitted batch-1 prefill
@@ -220,12 +230,12 @@ class SlotServer:
                 round_fn, state, idx0 + jnp.arange(K, dtype=jnp.int32))
             return state
 
-        self._chunk_fn = jax.jit(
+        self._chunk_fn = self.watch.wrap("chunk", jax.jit(
             chunk,
             in_shardings=(self.param_shardings(), self.state_shardings(),
                           NamedSharding(self.mesh, P())),
             out_shardings=self.state_shardings(),
-            donate_argnums=(1,))
+            donate_argnums=(1,)))
         return self._chunk_fn
 
     def admit_fn(self):
@@ -257,8 +267,9 @@ class SlotServer:
                 "keys": state["keys"].at[slot].set(key),
             }
 
-        self._admit_fn = jax.jit(admit, out_shardings=self.state_shardings(),
-                                 donate_argnums=(0,))
+        self._admit_fn = self.watch.wrap("admit", jax.jit(
+            admit, out_shardings=self.state_shardings(),
+            donate_argnums=(0,)))
         return self._admit_fn
 
     def prefill_fn(self, prompt_len: int):
@@ -273,22 +284,17 @@ class SlotServer:
                                           ctx_len=ctx)
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
-            fn = jax.jit(pf)
+            fn = self.watch.wrap(f"prefill[{prompt_len}]", jax.jit(pf))
             self._prefill_jits[prompt_len] = fn
         return fn
 
     def compile_counts(self) -> dict:
         """Traced-signature counts of the cached jits (the no-retrace
         gate: rotating requests through freed slots must keep these at 1
-        per program)."""
-        out = {}
-        if self._chunk_fn is not None:
-            out["chunk"] = self._chunk_fn._cache_size()
-        if self._admit_fn is not None:
-            out["admit"] = self._admit_fn._cache_size()
-        for plen, fn in self._prefill_jits.items():
-            out[f"prefill[{plen}]"] = fn._cache_size()
-        return out
+        per program).  Backed by the :class:`repro.obs.CompileWatch`
+        retrace sentinel — with a recorder attached, every compile also
+        lands as an instant in the trace."""
+        return self.watch.counts()
 
     # ---- driver ------------------------------------------------------------
     def serve(self, params, prompts: np.ndarray, max_new: int, *,
@@ -346,11 +352,13 @@ class SlotServer:
 
         trace = AdmissionTrace(n_req, wait_b=policy.wait_b)
         state = self.init_state()
+        rec = self.recorder
         slot_rid = [-1] * S
         fin: dict = {}                # rid -> completion step
         admit_t: dict = {}            # rid -> admission step
         outputs: dict = {}            # rid -> [tok0_dev, host ints...]
         step_maps: dict = {}          # chunk start -> slot_rid snapshot
+        req_ns: dict = {}             # rid -> admission wall-clock ns (obs)
         tap_stats = {"rows": 0}
         mismatches: list = []
         evicted: dict = {}            # rid -> quarantine step (from tap)
@@ -372,6 +380,10 @@ class SlotServer:
                     if rid not in evicted:
                         evicted[rid] = int(idx)
                         trace.evicted(rid, int(idx))
+                        if rec is not None:
+                            rec.instant("evict", lane="faults", rid=rid,
+                                        step=int(idx))
+                            rec.count("evictions")
                 ev = evicted.get(rid) if rid >= 0 else None
                 predicted = (rid >= 0
                              and (idx - admit_t[rid]) < max_new - 1
@@ -398,6 +410,7 @@ class SlotServer:
                         f"slot loop passed its horizon ({horizon} steps) "
                         f"with {n_req - done} requests unfinished — "
                         "admission bookkeeping is stuck")
+                sweep0 = rec.now_ns() if rec is not None else 0
                 # -- completions (deterministic, no readback) --------------
                 freed = sorted(
                     (s for s in range(S)
@@ -409,6 +422,12 @@ class SlotServer:
                     trace.completed(rid, s, fin[rid], in_flight + 1)
                     policy.notify_completion(rid)
                     done += 1
+                    if rec is not None and rid in req_ns:
+                        # per-request lifetime on the slot's own lane
+                        rec.span_at("request", f"slot{s}", req_ns.pop(rid),
+                                    rec.now_ns(), rid=rid,
+                                    steps=fin[rid] - admit_t[rid] + 1)
+                        rec.count("completions")
                 # -- deadline timeouts (queue-wait budget) -----------------
                 if deadline is not None:
                     for r in range(n_req):
@@ -418,6 +437,10 @@ class SlotServer:
                             policy.cancel(r)
                             trace.timed_out(r, t)
                             done += 1
+                            if rec is not None:
+                                rec.instant("timeout", lane="server", rid=r,
+                                            step=t, wait=t - int(arr[r]))
+                                rec.count("timeouts")
                 # -- admissions into free slots ----------------------------
                 arrived = {r for r in range(n_req) if arr[r] <= t}
                 free = [s for s in range(S) if slot_rid[s] < 0]
@@ -426,22 +449,38 @@ class SlotServer:
                     if rid is None:
                         break
                     s = free[0]
-                    tok0, pcache = pf(params, prompts_dev[rid:rid + 1])
-                    state = admit(state, pcache, s, tok0[0],
-                                  jnp.int32(plen), jnp.int32(max_new - 1),
-                                  jax.random.fold_in(base_key, rid))
+                    with _span(rec, "prefill", "server", rid=rid, plen=plen):
+                        tok0, pcache = pf(params, prompts_dev[rid:rid + 1])
+                    with _span(rec, "admit", "server", rid=rid, slot=s):
+                        state = admit(state, pcache, s, tok0[0],
+                                      jnp.int32(plen),
+                                      jnp.int32(max_new - 1),
+                                      jax.random.fold_in(base_key, rid))
                     outputs[rid] = [tok0]
                     admit_t[rid] = t
                     fin[rid] = t + max_new - 1
                     trace.admitted(rid, t)
+                    if rec is not None:
+                        rec.hist("ttft_steps", t - int(arr[rid]))
+                        req_ns[rid] = rec.now_ns()
                     if max_new == 1:      # completes at admission
                         trace.completed(rid, s, t, in_flight + 1)
                         policy.notify_completion(rid)
                         done += 1
+                        if rec is not None and rid in req_ns:
+                            rec.span_at("request", f"slot{s}",
+                                        req_ns.pop(rid), rec.now_ns(),
+                                        rid=rid, steps=1)
+                            rec.count("completions")
                     else:
                         slot_rid[s] = rid
                         in_flight += 1
                         free.pop(0)
+                if rec is not None:
+                    rec.span_at("admission_sweep", "server", sweep0,
+                                rec.now_ns(), t=t)
+                    rec.gauge("in_flight", in_flight, lane="server")
+                    rec.gauge("occupancy", in_flight / S, lane="server")
                 if done >= n_req:
                     break
                 if in_flight == 0:
@@ -458,11 +497,14 @@ class SlotServer:
                     rid = slot_rid[s]
                     if rid >= 0:
                         busy_steps += max(0, min(t + K, fin[rid]) - t)
-                state = chunk(params, state, jnp.int32(t))
+                with _span(rec, "launch", "server", t=t,
+                           in_flight=in_flight):
+                    state = chunk(params, state, jnp.int32(t))
                 chunks += 1
                 t += K
-            state = jax.block_until_ready(state)
-            jax.effects_barrier()
+            with _span(rec, "barrier", "server"):
+                state = jax.block_until_ready(state)
+                jax.effects_barrier()
         finally:
             self._tap_sink = None
 
@@ -497,6 +539,13 @@ class SlotServer:
         ttft = np.array([admit_t[r] - arr[r] if r in admit_t else -1
                          for r in range(n_req)], np.int64)
         occ = busy_steps / (chunks * K * S) if chunks else 0.0
+        if rec is not None:
+            self.watch.observe()
+            rec.count("requests", n_req)
+            rec.count("serve_chunks", chunks)
+            rec.count("serve_decode_steps", chunks * K)
+            rec.count("serve_tap_rows", tap_stats["rows"])
+            rec.gauge("occupancy_mean", float(occ), lane="server")
         return ServeResult(tokens=toks, schedule=trace.schedule(),
                            ttft_steps=ttft, occupancy=float(occ),
                            decode_steps=chunks * K, chunks=chunks,

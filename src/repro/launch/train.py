@@ -99,6 +99,18 @@ def main():
                          "in-mask (the apply is gated, never the scan), "
                          "offending workers' effective stepsize backs off "
                          "and recovers (repro.faults.GuardConfig defaults)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON of the run "
+                         "(launch/host_sync/tap/snapshot/compile spans) — "
+                         "load it at ui.perfetto.dev or chrome://tracing")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the schema-versioned JSONL metrics log "
+                         "(counters/gauges/histograms; validate with "
+                         "python -m repro.obs.schema PATH)")
+    ap.add_argument("--obs-summary", action="store_true",
+                    help="print the observability summary table "
+                         "(time-in-phase, throughput, counters) after "
+                         "the run")
     ap.add_argument("--heterogeneity", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -177,22 +189,38 @@ def main():
             checkpoint.save(args.ckpt, state, step=i + 1,
                             meta={"arch": cfg.name})
 
+    recorder = None
+    if args.trace_out or args.metrics_out or args.obs_summary:
+        from ..obs import Recorder
+        recorder = Recorder()
+
     # only the scan runtime honours --metrics; eager keeps its per-round
     # callbacks (the executor rejects on_step solely for scan + "none")
     strip_on_step = args.metrics == "none" and args.runtime == "scan"
     backend = TrainerBackend(
         mesh=mesh, rules=rules,
         on_step=None if strip_on_step else on_step,
-        snapshot=snapshot)
+        snapshot=snapshot, recorder=recorder)
     res = backend.run(spec)
     final = "n/a" if res.losses is None else f"{res.losses[-1]:.4f}"
+    tripped = res.extra.get("tripped_round")
     print(f"done in {res.seconds:.1f}s  final loss={final}  "
           f"tau_max={res.trace['tau_max']}  "
           f"launches={res.extra['launches']} "
           f"host_syncs={res.extra['host_syncs']} "
           f"tap_events={res.extra['tap_events']}"
           + (f" snapshots={res.extra['snapshots']}"
-             if args.snapshot_every else ""))
+             if args.snapshot_every else "")
+          + (f"  BREAKER TRIPPED at round {tripped}"
+             if tripped is not None else ""))
+    if recorder is not None:
+        if args.trace_out:
+            print("chrome trace:", recorder.export_chrome(args.trace_out))
+        if args.metrics_out:
+            print("metrics log:", recorder.export_metrics(args.metrics_out))
+        if args.obs_summary:
+            from ..obs import render_summary
+            print(render_summary(res.extra["obs"], trace=res.trace))
     if args.tau_report:
         from ..scenarios import render_report, tau_report
         print(render_report(tau_report(

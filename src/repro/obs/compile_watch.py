@@ -1,0 +1,116 @@
+"""Retrace sentinel: watch cached jits for steady-state recompilation.
+
+The repo's compiled drivers (``PlanExecutor``, ``SlotServer``) live and
+die by ONE rule: the jitted programs are cached on the instance and must
+never re-trace once warm — a silent retrace turns a 5.6× dispatch win
+into a recompile-per-run regression (found twice already: the fresh-
+closure tiler in PR 5, the fresh ``jax.jit`` per ``Server.generate`` in
+PR 7).  :class:`CompileWatch` generalises the ``SlotServer.compile_counts``
+gate those PRs hand-rolled:
+
+* :meth:`wrap` wraps any cached jit; after each call the traced-signature
+  count (``fn._cache_size()``) is compared to the last seen value and
+  every growth is recorded as a ``compile`` trace instant (plus a
+  ``compiles`` counter) on the attached recorder — compile events land in
+  the trace next to the launch that triggered them.
+* :meth:`counts` is the machine-readable registry snapshot (the old
+  ``compile_counts()`` shape).
+* :meth:`mark_steady` / :meth:`check_steady` assert the zero-steady-state-
+  retrace contract: snapshot the counts once warm, then any later growth
+  raises :class:`RetraceError` naming the offending program.
+
+The per-call overhead is one ``_cache_size()`` read (a host-side dict
+``len``) at boundaries that already dispatch an XLA program — nothing on
+the device path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+
+class RetraceError(RuntimeError):
+    """A watched jit re-traced after :meth:`CompileWatch.mark_steady`."""
+
+
+def _cache_size(fn) -> int:
+    sizer = getattr(fn, "_cache_size", None)
+    return int(sizer()) if sizer is not None else -1
+
+
+class CompileWatch:
+    """Registry of cached jits + their traced-signature counts."""
+
+    def __init__(self, recorder=None, lane: str = "compile"):
+        self.recorder = recorder
+        self.lane = lane
+        self._fns: dict = {}       # name -> the underlying jitted fn
+        self._seen: dict = {}      # name -> last observed signature count
+        self._steady: Optional[dict] = None
+
+    def register(self, name: str, fn) -> None:
+        """Track ``fn`` without wrapping (counts/steady checks only)."""
+        self._fns[name] = fn
+        self._seen.setdefault(name, _cache_size(fn))
+
+    def wrap(self, name: str, fn) -> Callable:
+        """Track ``fn`` AND return a call-through wrapper that records a
+        ``compile`` instant whenever a call grew the traced-signature
+        count (i.e. this call paid a trace+compile)."""
+        self.register(name, fn)
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kw):
+            out = fn(*args, **kw)
+            self._note(name)
+            return out
+
+        wrapped.__wrapped_jit__ = fn
+        return wrapped
+
+    def _note(self, name: str) -> None:
+        now = _cache_size(self._fns[name])
+        last = self._seen.get(name, 0)
+        if now > last:
+            self._seen[name] = now
+            rec = self.recorder
+            if rec is not None:
+                rec.instant("compile", lane=self.lane, fn=name,
+                            signatures=now)
+                rec.count("compiles", now - max(last, 0))
+
+    def observe(self) -> dict:
+        """Re-read every registered fn (for jits called outside their
+        wrappers) and record instants for any growth; returns counts."""
+        for name in self._fns:
+            self._note(name)
+        return self.counts()
+
+    def counts(self) -> dict:
+        """``{name: traced-signature count}`` for every registered jit."""
+        return {name: _cache_size(fn) for name, fn in self._fns.items()}
+
+    # ------------------------------------------------------- steady contract
+    def mark_steady(self) -> dict:
+        """Snapshot the current counts as the allowed steady state (call
+        once the driver is warm — after the first full run, which may
+        legitimately trace e.g. a ragged-tail chunk length)."""
+        self._steady = self.counts()
+        return dict(self._steady)
+
+    def check_steady(self) -> None:
+        """Raise :class:`RetraceError` if any watched jit traced a new
+        signature since :meth:`mark_steady`."""
+        if self._steady is None:
+            raise RetraceError(
+                "check_steady() before mark_steady(): nothing to compare "
+                "against")
+        grown = {name: (self._steady.get(name, 0), now)
+                 for name, now in self.counts().items()
+                 if now > self._steady.get(name, 0)}
+        if grown:
+            detail = ", ".join(f"{n}: {a} -> {b}"
+                               for n, (a, b) in sorted(grown.items()))
+            raise RetraceError(
+                f"steady-state retrace detected ({detail}) — a cached "
+                "program specialised on something that varies per call")

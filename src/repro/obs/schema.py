@@ -1,0 +1,120 @@
+"""Versioned schema of the JSONL metrics log (and its validator).
+
+Every line of a ``Tracer.export_metrics`` log is a standalone JSON
+object tagged ``"v": METRICS_SCHEMA_VERSION`` — consumers (the CI
+schema gate, the future self-tuning cache) validate per line and can
+skip kinds they predate.  Line kinds:
+
+* ``header`` — exactly one, first: ``{"v", "kind", "source",
+  "wall_s", "created_unix"}``.
+* ``gauge`` — a timestamped point sample: ``{"v", "kind", "t_us",
+  "lane", "name", "value"}`` (``t_us``: microseconds on the tracer's
+  monotonic clock).
+* ``counter`` — a final cumulative value: ``{"v", "kind", "name",
+  "value"}``.
+* ``hist`` — a histogram summary: ``{"v", "kind", "name", "count",
+  "min", "max", "mean", "p50", "p95"}``.
+
+The validator is hand-rolled (this package is zero-dependency by
+contract — no jsonschema): required keys, types, and the
+header-first/header-once structural rules.  Run it as a module to gate
+a file in CI::
+
+    python -m repro.obs.schema experiments/figs/obs_metrics.jsonl
+"""
+from __future__ import annotations
+
+import json
+
+#: bump on any breaking change to the line layouts above
+METRICS_SCHEMA_VERSION = 1
+
+_NUM = (int, float)
+#: kind -> {field: required types}; bool is an int subclass, so numeric
+#: fields explicitly reject it
+_FIELDS = {
+    "header": {"source": str, "wall_s": _NUM, "created_unix": _NUM},
+    "gauge": {"t_us": _NUM, "lane": str, "name": str, "value": _NUM},
+    "counter": {"name": str, "value": _NUM},
+    "hist": {"name": str, "count": int, "min": _NUM, "max": _NUM,
+             "mean": _NUM, "p50": _NUM, "p95": _NUM},
+}
+
+
+class SchemaError(ValueError):
+    """A metrics log line violated the versioned schema."""
+
+
+def validate_line(obj: dict, lineno: int = 0) -> str:
+    """Validate one parsed line; returns its kind, raises SchemaError."""
+    where = f"line {lineno}: " if lineno else ""
+    if not isinstance(obj, dict):
+        raise SchemaError(f"{where}expected a JSON object, got "
+                          f"{type(obj).__name__}")
+    v = obj.get("v")
+    if v != METRICS_SCHEMA_VERSION:
+        raise SchemaError(
+            f"{where}schema version {v!r} != {METRICS_SCHEMA_VERSION} "
+            "(this build validates only its own version)")
+    kind = obj.get("kind")
+    if kind not in _FIELDS:
+        raise SchemaError(
+            f"{where}unknown kind {kind!r}; want one of {sorted(_FIELDS)}")
+    for field, types in _FIELDS[kind].items():
+        if field not in obj:
+            raise SchemaError(f"{where}{kind} line missing {field!r}")
+        val = obj[field]
+        if isinstance(val, bool) or not isinstance(val, types):
+            raise SchemaError(
+                f"{where}{kind}.{field} has type {type(val).__name__}, "
+                f"want {types}")
+    return kind
+
+
+def validate_lines(lines) -> dict:
+    """Validate a parsed log (iterable of dicts): per-line schema plus
+    the structural rules (header exactly once, first).  Returns the
+    per-kind line counts."""
+    counts: dict = {}
+    for i, obj in enumerate(lines, start=1):
+        kind = validate_line(obj, i)
+        if kind == "header" and i != 1:
+            raise SchemaError(f"line {i}: header must be line 1 and unique")
+        counts[kind] = counts.get(kind, 0) + 1
+    if counts.get("header", 0) != 1:
+        raise SchemaError(
+            f"log has {counts.get('header', 0)} header lines, want exactly 1")
+    return counts
+
+
+def validate_metrics_log(path: str) -> dict:
+    """Parse + validate a JSONL metrics file; returns per-kind counts."""
+    parsed = []
+    with open(path) as f:
+        for i, raw in enumerate(f, start=1):
+            raw = raw.strip()
+            if not raw:
+                raise SchemaError(f"line {i}: blank line in JSONL log")
+            try:
+                parsed.append(json.loads(raw))
+            except json.JSONDecodeError as e:
+                raise SchemaError(f"line {i}: not valid JSON: {e}") from e
+    return validate_lines(parsed)
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="validate a repro.obs JSONL metrics log")
+    ap.add_argument("path", help="metrics .jsonl file to validate")
+    args = ap.parse_args(argv)
+    counts = validate_metrics_log(args.path)
+    total = sum(counts.values())
+    print(f"{args.path}: {total} lines valid against metrics schema "
+          f"v{METRICS_SCHEMA_VERSION} "
+          f"({', '.join(f'{k}={v}' for k, v in sorted(counts.items()))})")
+
+
+if __name__ == "__main__":
+    main()

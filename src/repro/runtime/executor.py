@@ -43,10 +43,12 @@ device-synthesised batches, same plan slices; only the dispatch differs).
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Callable, Optional
 
 import numpy as np
 
+from ..obs import CompileWatch
 from .plan import RunPlan
 
 #: fixed metric order of the on-device accumulator row; mirrors the dict
@@ -56,6 +58,14 @@ METRICS = ("loss", "ce", "aux", "grad_norm", "participation",
            "skipped", "gscale")
 
 _LOSS_IDX = METRICS.index("loss")
+_SKIP_IDX = METRICS.index("skipped")
+_GSCALE_IDX = METRICS.index("gscale")
+
+
+def _span(rec, name, lane, **args):
+    """Optional-recorder span: a real span when observing, else a no-op
+    (un-observed runs must pay nothing on the dispatch path)."""
+    return rec.span(name, lane, **args) if rec is not None else nullcontext()
 
 #: metric transport modes of the scan executor
 METRIC_MODES = ("chunk", "tap", "none")
@@ -205,13 +215,16 @@ class PlanExecutor:
     fresh closure per run would silently recompile every time.
     """
 
-    def __init__(self, trainer, plan: RunPlan, *, donate: bool = True):
+    def __init__(self, trainer, plan: RunPlan, *, donate: bool = True,
+                 recorder=None):
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         self.trainer = trainer
         self.plan = plan
         self.donate = donate
+        self.recorder = recorder      # repro.obs.Recorder | None
+        self.watch = CompileWatch(recorder)   # retrace sentinel over the jits
         self._batch_of = make_batch_fn(plan, trainer.cfg)
         self._repl = NamedSharding(trainer.mesh, P())   # plan slices
         self._step = trainer.train_step_fn()
@@ -220,6 +233,12 @@ class PlanExecutor:
         self._grid_jits = {}          # (n_grid, mode) -> jitted grid chunk
         self._stack_jit = None        # cached γ-axis state tiler
         self._tap_sink = None         # per-run host consumer of tap rows
+
+    def compile_counts(self) -> dict:
+        """Traced-signature counts of the cached jits (the executor twin
+        of ``SlotServer.compile_counts`` — warm reruns must not grow
+        these beyond the first run's, incl. its ragged-tail length)."""
+        return self.watch.counts()
 
     # ------------------------------------------------------------- chunk body
     def _scan_body(self, *, force_scale: bool = False):
@@ -305,11 +324,11 @@ class PlanExecutor:
 
         state_sh = self.trainer.state_shardings()
         # self._repl is a pytree PREFIX: every plan slice in xs replicated
-        fn = jax.jit(
+        fn = self.watch.wrap(f"chunk[{mode}]", jax.jit(
             chunk,
             in_shardings=(state_sh, self._repl),
             out_shardings=(state_sh, None) if mode == "chunk" else state_sh,
-            donate_argnums=(0,) if self.donate else ())
+            donate_argnums=(0,) if self.donate else ()))
         self._chunk_jits[mode] = fn
         return fn
 
@@ -339,7 +358,9 @@ class PlanExecutor:
                 states, grid_scales, shared)
             return (states, ys) if mode == "chunk" else states
 
-        fn = jax.jit(chunk, donate_argnums=(0,) if self.donate else ())
+        fn = self.watch.wrap(f"grid[{n_grid},{mode}]",
+                             jax.jit(chunk, donate_argnums=(0,)
+                                     if self.donate else ()))
         self._grid_jits[key] = fn
         return fn
 
@@ -366,8 +387,34 @@ class PlanExecutor:
         chunk is already free to launch), which is the barrier-free
         durability contract."""
         if snapshot is not None and snapshot.due(hi, self.plan.rounds):
-            snapshot.offer(hi, state)
+            with _span(self.recorder, "snapshot_offer", "snapshot",
+                       round=hi):
+                snapshot.offer(hi, state)
             stats.snapshots += 1
+
+    def _attach_obs(self, snapshot, breaker=None) -> None:
+        """Thread this run's recorder into the collaborators that emit
+        their own spans (snapshot finalise happens inside the
+        snapshotter, possibly a whole cadence after the offer)."""
+        rec = self.recorder
+        if rec is None:
+            return
+        if snapshot is not None and getattr(snapshot, "recorder",
+                                            None) is None:
+            snapshot.recorder = rec
+
+    def _record_stats(self, stats: "ExecStats", rounds: int) -> None:
+        """Fold the run's dispatch accounting into the obs counters (and
+        let the retrace sentinel stamp any compile events it missed)."""
+        rec = self.recorder
+        if rec is None:
+            return
+        self.watch.observe()
+        rec.count("rounds", rounds)
+        rec.count("launches", stats.launches)
+        rec.count("host_syncs", stats.host_syncs)
+        rec.count("tap_events", stats.tap_events)
+        rec.count("snapshots", stats.snapshots)
 
     # ------------------------------------------------------------------ scan
     def run_scan(self, state, *, rounds_per_launch: int = 8,
@@ -431,17 +478,36 @@ class PlanExecutor:
         plan = self.plan
         fn = self._chunk_jit(metrics)
         stats = ExecStats()
+        rec = self.recorder
+        self._attach_obs(snapshot, breaker)
         bounds = list(_chunk_bounds(plan.rounds, rounds_per_launch,
                                     start_round))
 
         if metrics == "tap":
             tap_rows = {}
+            tripped_seen = [False]
 
             def sink(i, row):
                 tap_rows[i] = row
                 stats.tap_events += 1
+                if rec is not None:
+                    # host boundary that already exists (the io_callback
+                    # sink runs per round regardless) — one instant, plus
+                    # the guard-rail channels when they fire
+                    rec.instant("tap_round", lane="tap", round=i)
+                    if row[_SKIP_IDX] > 0:
+                        rec.instant("guard_skip", lane="faults", round=i,
+                                    gscale=float(row[_GSCALE_IDX]))
+                    elif row[_GSCALE_IDX] != 1.0:
+                        rec.gauge("gscale", float(row[_GSCALE_IDX]),
+                                  lane="faults")
                 if breaker is not None:
                     breaker.observe(i, row[_LOSS_IDX])
+                    if breaker.tripped and not tripped_seen[0]:
+                        tripped_seen[0] = True
+                        if rec is not None:
+                            rec.instant("breaker_trip", lane="faults",
+                                        round=breaker.tripped_round)
                 if on_step is not None:
                     on_step(i, None, _row_dict(row))
 
@@ -451,7 +517,8 @@ class PlanExecutor:
                 for lo, hi in bounds:
                     if breaker is not None and breaker.tripped:
                         break               # stop launching; queue drains
-                    state = fn(state, self._slices(lo, hi))
+                    with _span(rec, "launch", "executor", lo=lo, hi=hi):
+                        state = fn(state, self._slices(lo, hi))
                     stats.launches += 1
                     launched_hi = hi
                     self._maybe_snapshot(snapshot, hi, state, stats)
@@ -459,8 +526,9 @@ class PlanExecutor:
                 # enqueued chunks, then drains the callback queue — array
                 # readiness alone does NOT guarantee pending io_callbacks
                 # have run on every backend
-                state = jax.block_until_ready(state)
-                jax.effects_barrier()
+                with _span(rec, "barrier", "executor"):
+                    state = jax.block_until_ready(state)
+                    jax.effects_barrier()
             finally:
                 self._tap_sink = None
             if snapshot is not None:
@@ -477,6 +545,7 @@ class PlanExecutor:
                                 range(start_round, launched_hi)])
                       if n_rounds else np.zeros((0, len(METRICS)),
                                                 np.float32))
+            self._record_stats(stats, n_rounds)
             return ExecResult(
                 state=state,
                 metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
@@ -484,22 +553,28 @@ class PlanExecutor:
 
         if metrics == "none":
             for lo, hi in bounds:
-                state = fn(state, self._slices(lo, hi))
+                with _span(rec, "launch", "executor", lo=lo, hi=hi):
+                    state = fn(state, self._slices(lo, hi))
                 stats.launches += 1
                 self._maybe_snapshot(snapshot, hi, state, stats)
-            state = jax.block_until_ready(state)
+            with _span(rec, "barrier", "executor"):
+                state = jax.block_until_ready(state)
             if snapshot is not None:
                 snapshot.drain()
+            self._record_stats(stats,
+                               bounds[-1][1] - start_round if bounds else 0)
             return ExecResult(state=state, metrics={}, stats=stats)
 
         # metrics == "chunk"
         rows = []
         for lo, hi in bounds:
-            state, ms = fn(state, self._slices(lo, hi))
+            with _span(rec, "launch", "executor", lo=lo, hi=hi):
+                state, ms = fn(state, self._slices(lo, hi))
             stats.launches += 1
             self._maybe_snapshot(snapshot, hi, state, stats)
             if on_step is not None:
-                ms = np.asarray(ms)          # blocking readback per chunk
+                with _span(rec, "host_sync", "executor", lo=lo, hi=hi):
+                    ms = np.asarray(ms)      # blocking readback per chunk
                 stats.host_syncs += 1
                 for i in range(lo, hi):
                     on_step(i, state, _row_dict(ms[i - lo]))
@@ -507,13 +582,24 @@ class PlanExecutor:
         if on_step is None and rows:
             # overlapped path: every chunk is already enqueued; block once
             # and read all metric buffers back in one sync point
-            rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
+            with _span(rec, "host_sync", "executor", deferred=True):
+                rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
             stats.host_syncs = 1
-        state = jax.block_until_ready(state)
+        with _span(rec, "barrier", "executor"):
+            state = jax.block_until_ready(state)
         if snapshot is not None:
             snapshot.drain()
         all_ms = np.concatenate([np.asarray(r) for r in rows], axis=0) \
             if rows else np.zeros((0, len(METRICS)), np.float32)
+        if rec is not None and all_ms.size:
+            # guard-skip events from the materialised rows (the chunk
+            # transport has no per-round host boundary; args carry the
+            # round, the timestamp is the readback that surfaced it)
+            for i in np.nonzero(all_ms[:, _SKIP_IDX] > 0)[0]:
+                rec.instant("guard_skip", lane="faults",
+                            round=int(i) + start_round,
+                            gscale=float(all_ms[i, _GSCALE_IDX]))
+        self._record_stats(stats, int(all_ms.shape[0]))
         return ExecResult(
             state=state,
             metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
@@ -530,8 +616,9 @@ class PlanExecutor:
 
         if self._stack_jit is None:
             g = self.plan.n_grid
-            self._stack_jit = jax.jit(lambda s: jax.tree_util.tree_map(
-                lambda x: jnp.repeat(x[None], g, axis=0), s))
+            self._stack_jit = self.watch.wrap("stack_state", jax.jit(
+                lambda s: jax.tree_util.tree_map(
+                    lambda x: jnp.repeat(x[None], g, axis=0), s)))
         return self._stack_jit(state)
 
     def run_grid(self, state, *, rounds_per_launch: int = 8,
@@ -577,25 +664,33 @@ class PlanExecutor:
         states = state if stacked else self.stack_state(state)
 
         stats = ExecStats()
+        rec = self.recorder
+        self._attach_obs(snapshot)
         rows = []
+        last_hi = start_round
         for lo, hi in _chunk_bounds(plan.rounds, rounds_per_launch,
                                     start_round):
             shared = self._slices(lo, hi)
             del shared["scale"]          # per-γ rows replace the base scale
             scales = plan.grid_slice(lo, hi)
-            out = fn(states, shared, scales)
+            with _span(rec, "launch", "executor", lo=lo, hi=hi, grid=g):
+                out = fn(states, shared, scales)
             states, ms = out if metrics == "chunk" else (out, None)
             stats.launches += 1
+            last_hi = hi
             self._maybe_snapshot(snapshot, hi, states, stats)
             if ms is not None:
                 rows.append(ms)
         if rows:
-            rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
+            with _span(rec, "host_sync", "executor", deferred=True):
+                rows = [np.asarray(r) for r in jax.block_until_ready(rows)]
             stats.host_syncs = 1
-        states = jax.block_until_ready(states)
+        with _span(rec, "barrier", "executor"):
+            states = jax.block_until_ready(states)
         if snapshot is not None:
             snapshot.drain()
         all_ms = np.concatenate(rows, axis=1) if rows else None
+        self._record_stats(stats, last_hi - start_round)
         return ExecResult(
             state=states,
             metrics=({} if all_ms is None else
@@ -619,14 +714,15 @@ class PlanExecutor:
         with_scale = plan.adaptive or with_density
         if self._eager is None:
             self._eager = (
-                jax.jit(self._batch_of),
-                self.trainer.jit_train_step(
+                self.watch.wrap("eager_batch", jax.jit(self._batch_of)),
+                self.watch.wrap("eager_step", self.trainer.jit_train_step(
                     (plan.global_batch, plan.seq_len),
                     donate=self.donate,
                     with_delay_scale=with_scale,
                     with_grad_density=with_density,
-                    with_fault_gain=with_gain))
+                    with_fault_gain=with_gain)))
         batch_of, step = self._eager
+        rec = self.recorder
         rows = []
         stats = ExecStats()
         for i in range(start_round, plan.rounds):
@@ -640,15 +736,18 @@ class PlanExecutor:
                 args += (jnp.float32(plan.grad_density[i]),)
             if with_gain:
                 args += (jnp.asarray(plan.fault_gain[i]),)
-            state, m = step(*args)
+            with _span(rec, "launch", "executor", lo=i, hi=i + 1):
+                state, m = step(*args)
             stats.launches += 1
-            row = {k: float(m[k]) for k in METRICS}  # host sync per round
+            with _span(rec, "host_sync", "executor", lo=i, hi=i + 1):
+                row = {k: float(m[k]) for k in METRICS}  # host sync / round
             stats.host_syncs += 1
             rows.append([row[k] for k in METRICS])
             if on_step is not None:
                 on_step(i, state, row)
         all_ms = np.asarray(rows, np.float32) if rows else \
             np.zeros((0, len(METRICS)), np.float32)
+        self._record_stats(stats, plan.rounds - start_round)
         return ExecResult(
             state=state,
             metrics={k: all_ms[:, j] for j, k in enumerate(METRICS)},
@@ -658,10 +757,11 @@ class PlanExecutor:
 def run_scan(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
              metrics: str = "chunk", on_step: Optional[Callable] = None,
              start_round: int = 0, donate: bool = True,
-             snapshot=None, breaker=None) -> ExecResult:
+             snapshot=None, breaker=None, recorder=None) -> ExecResult:
     """One-shot convenience over :meth:`PlanExecutor.run_scan` (compiles
     fresh; hold a :class:`PlanExecutor` to reuse compiled chunks)."""
-    return PlanExecutor(trainer, plan, donate=donate).run_scan(
+    return PlanExecutor(trainer, plan, donate=donate,
+                        recorder=recorder).run_scan(
         state, rounds_per_launch=rounds_per_launch, metrics=metrics,
         on_step=on_step, start_round=start_round,
         snapshot=snapshot, breaker=breaker)
@@ -669,17 +769,19 @@ def run_scan(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
 
 def run_eager(trainer, plan: RunPlan, state, *,
               on_step: Optional[Callable] = None, start_round: int = 0,
-              donate: bool = True) -> ExecResult:
+              donate: bool = True, recorder=None) -> ExecResult:
     """One-shot convenience over :meth:`PlanExecutor.run_eager`."""
-    return PlanExecutor(trainer, plan, donate=donate).run_eager(
+    return PlanExecutor(trainer, plan, donate=donate,
+                        recorder=recorder).run_eager(
         state, on_step=on_step, start_round=start_round)
 
 
 def run_grid(trainer, plan: RunPlan, state, *, rounds_per_launch: int = 8,
              metrics: str = "chunk", start_round: int = 0,
-             donate: bool = True, snapshot=None) -> ExecResult:
+             donate: bool = True, snapshot=None, recorder=None) -> ExecResult:
     """One-shot convenience over :meth:`PlanExecutor.run_grid`."""
-    return PlanExecutor(trainer, plan, donate=donate).run_grid(
+    return PlanExecutor(trainer, plan, donate=donate,
+                        recorder=recorder).run_grid(
         state, rounds_per_launch=rounds_per_launch, metrics=metrics,
         start_round=start_round, snapshot=snapshot)
 

@@ -106,6 +106,76 @@ def test_serve_kind_gates_occupancy_and_missing_fields():
 
 
 # ---------------------------------------------------------------------------
+# the obs kind (absolute ceiling, like faults)
+# ---------------------------------------------------------------------------
+
+def _obs_payload(*, ratio=0.99, trace=True, metrics=True, taps=True):
+    return {"bench": "obs", "overhead_ratio": ratio, "trace_valid": trace,
+            "metrics_valid": metrics, "tap_events_match": taps}
+
+
+def test_obs_kind_gates_absolute_ceiling():
+    base = _obs_payload(ratio=0.99)
+    assert check_perf.check_obs(_obs_payload(ratio=0.97), base,
+                                tolerance=0.05) == []
+    fails = check_perf.check_obs(_obs_payload(ratio=0.90), base,
+                                 tolerance=0.05)
+    assert len(fails) == 1 and "overhead_ratio" in fails[0]
+    # the ceiling is absolute: a degraded committed baseline must NOT
+    # grandfather a current ratio below 1 - tolerance
+    fails = check_perf.check_obs(_obs_payload(ratio=0.90),
+                                 _obs_payload(ratio=0.89), tolerance=0.05)
+    assert len(fails) == 1
+
+
+def test_obs_kind_gates_structural_flags():
+    base = _obs_payload()
+    for kw, name in ((dict(trace=False), "trace_valid"),
+                     (dict(metrics=False), "metrics_valid"),
+                     (dict(taps=False), "tap_events_match")):
+        fails = check_perf.check_obs(_obs_payload(**kw), base,
+                                     tolerance=0.05)
+        assert len(fails) == 1 and name in fails[0]
+
+
+def test_obs_kind_reports_payload_shape_change_with_file_name():
+    fails = check_perf.check_obs({"bench": "obs"}, _obs_payload(),
+                                 tolerance=0.05,
+                                 paths=("cur_obs.json", "base_obs.json"))
+    assert len(fails) == 1
+    assert "overhead_ratio" in fails[0] and "cur_obs.json" in fails[0]
+
+
+# ---------------------------------------------------------------------------
+# file names in SKIP / FAILURE messages (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_missing_row_failure_names_both_files():
+    base = _runtime_payload()
+    cur = {"bench": "runtime_dispatch_ab",
+           "entries": [{"runtime": "eager", "metrics": "chunk",
+                        "rounds_per_launch": 1, "rounds_per_s": 50.0}]}
+    fails = check_perf.check_runtime(cur, base, tolerance=0.3,
+                                     paths=("cur.json", "base.json"))
+    assert len(fails) == 1
+    assert "cur.json" in fails[0] and "base.json" in fails[0]
+
+
+def test_rows_without_eager_names_the_file():
+    with pytest.raises(SystemExit, match="weird.json"):
+        check_perf._rows({"entries": []}, "weird.json")
+    with pytest.raises(SystemExit, match="weird.json"):
+        check_perf._serve_rows({"entries": []}, "weird.json")
+
+
+def test_faults_kind_missing_ratio_is_clean_failure_not_keyerror():
+    fails = check_perf.check_faults({"bench": "faults"}, {},
+                                    tolerance=0.1,
+                                    paths=("cur_faults.json", "b.json"))
+    assert len(fails) == 1 and "cur_faults.json" in fails[0]
+
+
+# ---------------------------------------------------------------------------
 # kind dispatch through main()
 # ---------------------------------------------------------------------------
 
@@ -134,7 +204,20 @@ def test_main_skips_unknown_kind(tmp_path):
 def test_main_rejects_kind_mismatch(tmp_path):
     r = _run_main(tmp_path, _serve_payload(), _runtime_payload())
     assert r.returncode != 0
-    assert "mismatch" in r.stdout + r.stderr
+    out = r.stdout + r.stderr
+    assert "mismatch" in out
+    # both offending files are named
+    assert "cur.json" in out and "base.json" in out
+
+
+def test_main_accepts_obs_payload(tmp_path):
+    r = _run_main(tmp_path, _obs_payload(), _obs_payload(),
+                  extra=("--tolerance", "0.05"))
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = _run_main(tmp_path, _obs_payload(ratio=0.5), _obs_payload(),
+                  extra=("--tolerance", "0.05"))
+    assert r.returncode == 1
+    assert "PERF REGRESSION" in r.stdout
 
 
 def test_main_fails_on_serve_regression(tmp_path):

@@ -289,6 +289,34 @@ def test_metrics_tap_streams_per_round():
                                **TOL)
 
 
+def test_tap_row_drop_fails_loudly():
+    """A tap row that never reaches the host sink must abort the run with
+    the delivered/expected accounting — never return silently truncated
+    curves.  The chunk jit binds ``self._emit_tap`` at trace time, so the
+    lossy transport is patched onto the instance BEFORE the first
+    ``run_scan`` builds the program."""
+    job = _job()
+    spec = _spec(job, T=6)
+    plan = _plan_for(spec, job)
+    tr = _trainer(job)
+    ex = PlanExecutor(tr, plan, donate=False)
+    orig = ex._emit_tap
+
+    def lossy(idx, row):
+        if int(idx) == 2:
+            return                    # swallow one io_callback delivery
+        orig(idx, row)
+
+    ex._emit_tap = lossy
+    state = tr.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(RuntimeError, match="io_callback was dropped"):
+        ex.run_scan(state, rounds_per_launch=3, metrics="tap")
+    # the counts in the message are the delivered/expected pair
+    with pytest.raises(RuntimeError, match=r"5/6"):
+        ex.run_scan(tr.init_state(jax.random.PRNGKey(0)),
+                    rounds_per_launch=3, metrics="tap")
+
+
 def test_metrics_none_discards_on_device():
     """metrics="none": no curves, no syncs, no taps — and an on_step
     callback is rejected up front (it would silently never fire)."""
