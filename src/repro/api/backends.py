@@ -446,13 +446,19 @@ class ServeBackend:
         ragged decode lanes; admissions follow the job's scheduler-registry
         policy, arrivals its timing-registry pattern."""
         from ..distributed import (SlotServer, SlotConfig, draw_arrivals,
-                                   parse_admission)
+                                   parse_admission, RetryPolicy,
+                                   OverloadPolicy)
         from ..scenarios import tau_report
 
         t0 = time.time()
         job, cfg, mesh, rules, params = self._setup(spec)
         n_req = job.n_requests or job.batch
         ctx = job.prompt_len + spec.T
+        retry = (RetryPolicy(max_attempts=job.max_retries,
+                             backoff_base=job.retry_backoff)
+                 if job.max_retries > 1 else None)
+        overload = (OverloadPolicy(job.queue_cap, job.shed_policy)
+                    if job.queue_cap is not None else None)
         server = SlotServer(
             cfg, mesh,
             SlotConfig(n_slots=job.n_slots, ctx_len=ctx,
@@ -464,10 +470,26 @@ class ServeBackend:
         prompts = np.random.default_rng(spec.seed).integers(
             0, cfg.vocab, (n_req, job.prompt_len)).astype(np.int32)
         arrivals = draw_arrivals(n_req, job.arrival, seed=spec.seed)
+        faults = None
+        if spec.scenario:
+            # the spec's scenario lowers onto the decode-step clock too:
+            # slot_poison / serve_preempt cells realise here, training
+            # transforms contribute nothing
+            from ..faults import realise_serve_faults
+
+            attempts = job.max_retries
+            fault_horizon = (2 * (int(arrivals.max(initial=0))
+                                  + n_req * spec.T * attempts
+                                  + job.steps_per_launch)
+                             + 4 * job.steps_per_launch)
+            faults = realise_serve_faults(spec.scenario, n_req,
+                                          fault_horizon, seed=spec.seed)
         t_dec = time.time()
         res = server.serve(params, prompts, spec.T,
                            admission=job.admission, arrivals=arrivals,
-                           deadline=job.deadline)
+                           deadline=job.deadline, retry=retry,
+                           overload=overload, drain_after=job.drain_after,
+                           faults=faults)
         dt = time.time() - t_dec
         return RunResult(
             spec=spec, backend=self.name, x=res.tokens,
@@ -481,6 +503,9 @@ class ServeBackend:
                    "decode_steps": res.decode_steps, "chunks": res.chunks,
                    "tap_rows": res.tap_rows,
                    "evictions": res.evictions, "timeouts": res.timeouts,
+                   "shed": res.shed, "drained": res.drained,
+                   "attempts": res.attempts,
+                   "resumed_from": res.resumed_from,
                    "obs": self.recorder.summary(rounds=res.decode_steps)
                    if self.recorder is not None else None,
                    "tau_report": tau_report(
@@ -488,7 +513,9 @@ class ServeBackend:
                        concurrency=job.n_slots,
                        scenario_spec=job.arrival or "",
                        evictions=res.evictions,
-                       timeouts=res.timeouts)})
+                       timeouts=res.timeouts,
+                       shed=res.shed, drained=res.drained,
+                       attempts=res.attempts)})
 
 
 def run(spec: ExperimentSpec, backend: Optional[Backend] = None) -> RunResult:

@@ -185,18 +185,48 @@ class ServeJob:
     #: queued past it is timed out at the admission sweep, never admitted,
     #: and surfaced in the result's timeout map / τ-report
     deadline: Optional[int] = None
+    #: retry budget (slot lane only): total admission attempts per request
+    #: (1 = detect-and-discard); > 1 re-queues evicted/timed-out requests
+    #: with exponential backoff ``retry_backoff · 2^(failures−1)`` steps
+    max_retries: int = 1
+    retry_backoff: int = 4              # backoff base, in decode steps
+    #: bounded admission queue (slot lane only): eligible waiters beyond
+    #: the cap are shed under ``shed_policy``
+    queue_cap: Optional[int] = None
+    shed_policy: str = "reject-new"     # "reject-new" | "drop-oldest"
+    #: graceful drain (slot lane only): stop admitting at this decode
+    #: step, finish in-flight lanes, cancel (account) the rest
+    drain_after: Optional[int] = None
 
     def __post_init__(self):
         if self.n_slots is not None and self.n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if self.steps_per_launch < 1:
             raise ValueError("steps_per_launch must be >= 1")
-        if self.deadline is not None:
-            if self.n_slots is None:
+        for knob, val in (("deadline", self.deadline),
+                          ("queue_cap", self.queue_cap),
+                          ("drain_after", self.drain_after)):
+            if val is not None and self.n_slots is None:
                 raise ValueError(
-                    "deadline is a slot-lane knob; set n_slots as well")
-            if self.deadline < 0:
-                raise ValueError("deadline must be >= 0")
+                    f"{knob} is a slot-lane knob; set n_slots as well")
+        if self.deadline is not None and self.deadline < 0:
+            raise ValueError("deadline must be >= 0")
+        if self.drain_after is not None and self.drain_after < 0:
+            raise ValueError("drain_after must be >= 0")
+        if self.max_retries < 1:
+            raise ValueError("max_retries must be >= 1 (1 = no retry)")
+        if self.max_retries > 1 and self.n_slots is None:
+            raise ValueError(
+                "max_retries is a slot-lane knob; set n_slots as well")
+        if self.retry_backoff < 0:
+            raise ValueError("retry_backoff must be >= 0")
+        # constructing the policies validates queue_cap/shed_policy too
+        from ..distributed.slot_serve import OverloadPolicy
+        if self.queue_cap is not None:
+            OverloadPolicy(self.queue_cap, self.shed_policy)
+        elif self.shed_policy not in ("reject-new", "drop-oldest"):
+            raise ValueError(
+                f"unknown shed policy {self.shed_policy!r}")
         from ..distributed.admission import parse_admission
         parse_admission(self.admission)     # fail fast on grammar errors
         if self.arrival:

@@ -73,13 +73,17 @@ class AsyncSnapshotter:
         return round_i % self.every == 0 or round_i >= total_rounds
 
     # --------------------------------------------------------------- offers
-    def offer(self, round_i: int, state) -> None:
+    def offer(self, round_i: int, state, meta: Optional[dict] = None) -> None:
         """Snapshot the carry at round ``round_i`` without blocking on it.
 
         Dispatches the device copy + async host fetch and returns; the
         PREVIOUS pending snapshot (whose fetch has been in flight since
         the last offer) is finalised to disk on the way out, keeping at
-        most one snapshot in flight (the double buffer)."""
+        most one snapshot in flight (the double buffer).  ``meta`` is
+        per-offer metadata merged into the saved ``meta.json`` — the slot
+        server rides its host-side ledger (queue, rid→slot map, emitted
+        tokens, retry/backoff state) here so a crash-resume restores the
+        DRIVER, not just the device carry."""
         import jax
 
         if self._copy_jit is None:
@@ -99,7 +103,7 @@ class AsyncSnapshotter:
         for leaf in jax.tree_util.tree_leaves(snap):
             if hasattr(leaf, "copy_to_host_async"):
                 leaf.copy_to_host_async()
-        self._pending.append((int(round_i), snap))
+        self._pending.append((int(round_i), snap, dict(meta or {})))
         while len(self._pending) > 1:
             self._write_oldest()
 
@@ -115,20 +119,17 @@ class AsyncSnapshotter:
         return os.path.join(self.path, f"round-{round_i:08d}")
 
     def _write_oldest(self) -> None:
-        r, snap = self._pending.popleft()
+        r, snap, extra = self._pending.popleft()
         rec = self.recorder
+        meta = {**self._meta, **extra, "round": r, "kind": "snapshot"}
         if rec is None:
-            checkpointer.save(
-                self.round_dir(r), snap, step=r,
-                meta={**self._meta, "round": r, "kind": "snapshot"})
+            checkpointer.save(self.round_dir(r), snap, step=r, meta=meta)
         else:
             # in the trace this span sits a whole cadence AFTER the
             # snapshot_offer/snapshot_copy of the same round — the
             # visible proof the two-deep async window overlaps compute
             with rec.span("snapshot_finalise", "snapshot", round=r):
-                checkpointer.save(
-                    self.round_dir(r), snap, step=r,
-                    meta={**self._meta, "round": r, "kind": "snapshot"})
+                checkpointer.save(self.round_dir(r), snap, step=r, meta=meta)
             rec.count("snapshot_writes")
         self._written.append((r, self.round_dir(r)))
         self._prune()

@@ -9,8 +9,15 @@ turns it into a per-job compute time ``r`` (in simulated seconds):
                 (i.e. std = sqrt(s_i); mean and variance both equal s_i,
                 matching the Poisson pattern's first two moments)
 * ``uniform``:  r ~ Uni(0, s_i)
+* ``bursty``:   r = 4·s_i w.p. 1/4, else ~0 — same mean s_i as the
+                others, but draws cluster: runs of near-zero gaps
+                (geometric, mean length 4) separated by 4·s_i lulls.
+                As an ARRIVAL pattern (``draw_arrivals``) this yields
+                burst traffic — batches of simultaneous requests — the
+                overload-shedding worst case.
 
-These are exactly the four patterns the paper benchmarks.  The simulator is
+The first four are exactly the patterns the paper benchmarks; ``bursty``
+is the serving lane's addition.  The simulator is
 agnostic: anything with ``sample(worker) -> float`` works.  Non-stationary
 worlds (drifting speeds, stragglers, elastic pools) wrap these stationary
 models — see :mod:`repro.scenarios`; the wrappers reuse :meth:`_draw` on a
@@ -21,7 +28,7 @@ from __future__ import annotations
 
 import numpy as np
 
-PATTERNS = ("fixed", "poisson", "normal", "uniform")
+PATTERNS = ("fixed", "poisson", "normal", "uniform", "bursty")
 
 
 class TimingModel:
@@ -65,9 +72,11 @@ class TimingModel:
         elif self.pattern == "normal":
             # mean s, variance s (std = sqrt(s)) — see module docstring
             r = abs(float(self._rng.normal(s, np.sqrt(s)))) + 1.0
-        else:  # uniform
+        elif self.pattern == "uniform":
             r = float(self._rng.uniform(0.0, s))
             r = max(r, 1e-6)
+        else:  # bursty: one uniform decides lull (p=1/4) vs in-burst (~0)
+            r = 4.0 * s if float(self._rng.random()) < 0.25 else 1e-6
         return r
 
     def _draw_batch(self, s: np.ndarray) -> np.ndarray:
@@ -84,7 +93,12 @@ class TimingModel:
             return np.maximum(self._rng.poisson(s).astype(np.float64), 1.0)
         if self.pattern == "normal":
             return np.abs(self._rng.normal(s, np.sqrt(s))) + 1.0
-        return np.maximum(self._rng.uniform(0.0, s), 1e-6)  # uniform
+        if self.pattern == "uniform":
+            return np.maximum(self._rng.uniform(0.0, s), 1e-6)
+        # bursty: Generator.random(shape) consumes the same doubles as the
+        # scalar loop, so the batch stays bit-identical to the oracle
+        u = self._rng.random(s.shape)
+        return np.where(u < 0.25, 4.0 * s, 1e-6)
 
     # ------------------------------------------------------------- public API
     def sample(self, worker: int) -> float:

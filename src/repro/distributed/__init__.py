@@ -4,7 +4,8 @@ from .sharding import (Rules, DEFAULT_RULES, SEQ_PARALLEL_RULES, auto_rules,
                        pooled_pspec)
 from .async_trainer import AsyncTrainer, AsyncConfig
 from .serve import Server, ServeConfig
-from .slot_serve import SlotServer, SlotConfig, ServeResult
+from .slot_serve import (SlotServer, SlotConfig, ServeResult, RetryPolicy,
+                         OverloadPolicy, ServePreempted, SHED_POLICIES)
 from .admission import (AdmissionPolicy, AdmissionTrace, draw_arrivals,
                         parse_admission)
 
@@ -12,6 +13,7 @@ __all__ = ["Rules", "DEFAULT_RULES", "SEQ_PARALLEL_RULES", "auto_rules", "logica
            "tree_pspecs", "tree_shardings", "bytes_per_device",
            "pool_axes", "pool_shard_count", "pooled_pspec",
            "AsyncTrainer", "AsyncConfig", "Server", "ServeConfig",
-           "SlotServer", "SlotConfig", "ServeResult",
+           "SlotServer", "SlotConfig", "ServeResult", "RetryPolicy",
+           "OverloadPolicy", "ServePreempted", "SHED_POLICIES",
            "AdmissionPolicy", "AdmissionTrace", "draw_arrivals",
            "parse_admission"]

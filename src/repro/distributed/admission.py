@@ -119,10 +119,21 @@ class AdmissionPolicy:
                 int(w) for w in self.sched.next_workers(batch))
 
     def cancel(self, rid: int) -> None:
-        """Withdraw a queued request (deadline timeout): it can no longer
-        be admitted — scheduler proposals that land on it cyclic-remap to
-        the next queued request, exactly like an already-admitted id."""
+        """Withdraw a queued request (deadline timeout / shed / drain):
+        it can no longer be admitted — scheduler proposals that land on
+        it cyclic-remap to the next queued request, exactly like an
+        already-admitted id."""
         self._queued.discard(int(rid))
+
+    def requeue(self, rid: int) -> None:
+        """Re-admit a failed request into the queue (retry path): the
+        request becomes pickable again AND a proposal for its own id is
+        pushed, so a retry never starves behind a scheduler that has no
+        completions left to propose from.  Deterministic — no RNG draw —
+        so retried admission orders replay exactly."""
+        rid = int(rid)
+        self._queued.add(rid)
+        self._proposals.append(rid)
 
     # -- selection -----------------------------------------------------------
     def _remap(self, proposal: int, avail: set) -> int:
@@ -153,6 +164,35 @@ class AdmissionPolicy:
     def n_queued(self) -> int:
         return len(self._queued)
 
+    # -- durability ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serialisable snapshot of the policy (proposals, queue,
+        wait_b buffer, scheduler RNG/permutation state) — enough that a
+        crash-resumed serve picks the SAME admission order the
+        uninterrupted run would have."""
+        st = {"proposals": [int(p) for p in self._proposals],
+              "queued": sorted(int(q) for q in self._queued),
+              "finished_buf": [int(x) for x in self._finished_buf]}
+        s = self.sched
+        rng = getattr(s, "_rng", None)
+        if rng is not None:
+            st["rng"] = rng.bit_generator.state
+        if hasattr(s, "_perm"):                    # shuffled variants
+            st["perm"] = [int(x) for x in s._perm]
+            st["perm_pos"] = int(s._r)
+        return st
+
+    def load_state(self, st: dict) -> None:
+        self._proposals = deque(int(p) for p in st["proposals"])
+        self._queued = {int(q) for q in st["queued"]}
+        self._finished_buf = [int(x) for x in st["finished_buf"]]
+        s = self.sched
+        if "rng" in st and hasattr(s, "_rng"):
+            s._rng.bit_generator.state = st["rng"]
+        if "perm" in st:
+            s._perm = np.asarray(st["perm"], dtype=np.int64)
+            s._r = int(st["perm_pos"])
+
 
 class AdmissionTrace:
     """Realised admission/completion events → an ordinary :class:`Schedule`.
@@ -174,6 +214,9 @@ class AdmissionTrace:
         self._events = []           # (finish_step, slot, rid, in_flight)
         self._evictions = {}        # rid -> quarantine step (device)
         self._timeouts = {}         # rid -> deadline-timeout step (host)
+        self._shed = {}             # rid -> overload-shed step (host)
+        self._drained = {}          # rid -> drain-cancel step (host)
+        self._attempts = {}         # rid -> failed attempts consumed
         self.completions = 0
 
     def admitted(self, rid: int, step: int) -> None:
@@ -196,6 +239,22 @@ class AdmissionTrace:
         """``rid``'s queue wait blew its deadline at ``step``: it is never
         admitted and contributes no Schedule row."""
         self._timeouts[rid] = int(step)
+
+    def shed(self, rid: int, step: int) -> None:
+        """``rid`` was shed by overload control at ``step`` (bounded
+        queue overflow): terminal, never admitted — no Schedule row."""
+        self._shed[rid] = int(step)
+
+    def drained(self, rid: int, step: int) -> None:
+        """``rid`` was cancelled at ``step`` by a graceful drain (server
+        stopped admitting): terminal — no Schedule row."""
+        self._drained[rid] = int(step)
+
+    def retried(self, rid: int, attempts: int) -> None:
+        """``rid`` consumed one failed attempt (eviction/timeout);
+        ``attempts`` is the running count — surfaces in the report's
+        degraded section so retries are visible, not silent."""
+        self._attempts[rid] = int(attempts)
 
     def schedule(self) -> Schedule:
         ev = sorted(self._events)
@@ -221,3 +280,43 @@ class AdmissionTrace:
     @property
     def timeouts(self) -> dict:
         return dict(self._timeouts)
+
+    @property
+    def shed_map(self) -> dict:
+        return dict(self._shed)
+
+    @property
+    def drained_map(self) -> dict:
+        return dict(self._drained)
+
+    @property
+    def attempts(self) -> dict:
+        return dict(self._attempts)
+
+    # -- durability ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serialisable trace state (dict keys stringify; load_state
+        converts them back)."""
+        return {
+            "admit_step": {str(k): v for k, v in self._admit_step.items()},
+            "admit_iter": {str(k): v for k, v in self._admit_iter.items()},
+            "events": [list(e) for e in self._events],
+            "evictions": {str(k): v for k, v in self._evictions.items()},
+            "timeouts": {str(k): v for k, v in self._timeouts.items()},
+            "shed": {str(k): v for k, v in self._shed.items()},
+            "drained": {str(k): v for k, v in self._drained.items()},
+            "attempts": {str(k): v for k, v in self._attempts.items()},
+            "completions": self.completions,
+        }
+
+    def load_state(self, st: dict) -> None:
+        as_int = lambda d: {int(k): int(v) for k, v in d.items()}  # noqa: E731
+        self._admit_step = as_int(st["admit_step"])
+        self._admit_iter = as_int(st["admit_iter"])
+        self._events = [tuple(int(x) for x in e) for e in st["events"]]
+        self._evictions = as_int(st["evictions"])
+        self._timeouts = as_int(st["timeouts"])
+        self._shed = as_int(st["shed"])
+        self._drained = as_int(st["drained"])
+        self._attempts = as_int(st["attempts"])
+        self.completions = int(st["completions"])

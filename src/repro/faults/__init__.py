@@ -21,7 +21,11 @@ from .transforms import (
     CorruptReceipt,
     HostPreempt,
     NanGrad,
+    ServeFaults,
+    ServePreempt,
+    SlotPoison,
     WorkerCrash,
+    realise_serve_faults,
 )
 
 __all__ = [
@@ -32,4 +36,8 @@ __all__ = [
     "CorruptReceipt",
     "WorkerCrash",
     "HostPreempt",
+    "SlotPoison",
+    "ServePreempt",
+    "ServeFaults",
+    "realise_serve_faults",
 ]

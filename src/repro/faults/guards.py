@@ -74,11 +74,16 @@ class DivergenceBreaker:
     """Windowed divergence circuit-breaker fed from the tap lane.
 
     Maintains a sliding window of the last ``window`` *finite* losses
-    (non-finite rounds are the skip-guard's job, not the breaker's) and
-    the best — lowest — window mean seen so far.  Once at least one full
-    window has been observed, a current window mean exceeding
+    and the best — lowest — window mean seen so far.  Once at least one
+    full window has been observed, a current window mean exceeding
     ``factor × best`` trips the breaker; the first observed round at or
     past the trip is recorded in :attr:`tripped_round`.
+
+    A NON-FINITE loss trips immediately: NaN compares false against
+    ``factor × best``, so folding it into the window would leave a
+    NaN-only divergence undetected forever.  (The device-side skip guard
+    still drops the round's update; the breaker's job is to stop
+    LAUNCHING — a run whose loss went NaN has nothing left to compute.)
 
     ``observe`` is called from the executor's ordered tap callback, so
     rounds arrive in order; the executor polls :attr:`tripped` before
@@ -107,7 +112,9 @@ class DivergenceBreaker:
             return True
         loss = float(loss)
         if loss != loss or loss in (float("inf"), float("-inf")):
-            return False                    # non-finite → skip-guard's domain
+            # NaN/inf never exceeds factor×best by comparison — trip NOW
+            self.tripped_round = int(round_idx)
+            return True
         self._recent.append(loss)
         if len(self._recent) < self.window:
             return False

@@ -27,18 +27,39 @@ Channels:
   killed.  Tests and the crash-resume gate read it to schedule SIGKILL;
   the compiled program never sees it.
 
+Serving-lane faults run on the DECODE-STEP clock instead of the round
+clock (``prepare`` receives ``n = n_requests`` and ``rounds = horizon``
+in decode steps):
+
+* ``serve_poisons`` — :class:`SlotPoison` names (rid, decode-step) cells
+  whose logits the slot server forces to NaN before its finite check:
+  the lane quarantines exactly there, deterministically, driving the
+  retry/re-admission path end-to-end.
+* ``serve_preempt_steps`` — :class:`ServePreempt` is the serve driver's
+  ``host_preempt``: decode-step boundaries where the driver dies.  The
+  in-process harness raises ``ServePreempted`` there (after forcing a
+  snapshot offer); the SIGKILL gate kills a real subprocess.
+
+:func:`realise_serve_faults` lowers any scenario spec string to a
+:class:`ServeFaults` bundle (non-serve transforms contribute nothing),
+which ``SlotServer.serve(faults=...)`` consumes.
+
 Grammar (same ``name:k=v,...`` spec strings as every other transform)::
 
     nan_grad:k=1,every=16,span=1
     corrupt_receipt:k=1,scale=1e4,every=16,span=1
     worker_crash:k=1,at=16,span=16,permanent=1
     host_preempt:at=32
+    slot_poison:rid=1,step=4,every=0
+    serve_preempt:at=16,every=0
 
-Importing this module registers the four names into
+Importing this module registers the names into
 ``repro.scenarios.TRANSFORMS`` (``repro.scenarios`` imports it, so any
 path that can parse a spec string already knows them).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -171,9 +192,117 @@ class HostPreempt(WorldTransform):
         return self._rounds
 
 
+class SlotPoison(WorldTransform):
+    """Deterministic serve-lane poisoning: request ``rid``'s decode
+    logits go NaN at decode step ``step`` (and every ``every`` steps
+    after, when ``every > 0``) — IF the request occupies a slot then.
+    The device quarantines the lane in-mask; with retries enabled the
+    host re-admits with backoff, so this transform is the unit driver of
+    the whole recovery path.  A request poisoned at ``every=1`` fails on
+    every attempt — the retry-exhaustion worst case."""
+
+    name = "slot_poison"
+
+    def __init__(self, rid: int = 0, step: int = 1, every: int = 0):
+        if rid < 0:
+            raise ValueError(f"slot_poison rid must be >= 0 (got {rid})")
+        if step < 0:
+            raise ValueError(f"slot_poison step must be >= 0 (got {step})")
+        if every < 0:
+            raise ValueError(f"slot_poison every must be >= 0 (got {every})")
+        self.rid = int(rid)
+        self.step = int(step)
+        self.every = int(every)
+
+    def prepare(self, n, rounds, rng):
+        horizon = max(rounds, self.step + 1)
+        rid = min(self.rid, max(n - 1, 0))    # clamp to the request set
+        steps = ([self.step] if self.every == 0
+                 else list(range(self.step, horizon, self.every)))
+        self._cells = np.array([(rid, s) for s in steps], dtype=np.int64)
+
+    def serve_poisons(self):
+        return self._cells
+
+
+class ServePreempt(WorldTransform):
+    """Scheduled preemption of the SERVE driver at decode-step boundary
+    ``at`` (and every ``every`` steps after, when ``every > 0``) — the
+    decode-clock sibling of :class:`HostPreempt`.  Pure host metadata:
+    the slot server force-offers a snapshot and raises
+    ``ServePreempted`` at the first chunk boundary past each point;
+    harnesses catch it and resume from the snapshot directory."""
+
+    name = "serve_preempt"
+
+    def __init__(self, at: int = 8, every: int = 0):
+        if at < 1:
+            raise ValueError(f"serve_preempt at must be >= 1 (got {at})")
+        if every < 0:
+            raise ValueError(
+                f"serve_preempt every must be >= 0 (got {every})")
+        self.at = int(at)
+        self.every = int(every)
+
+    def prepare(self, n, rounds, rng):
+        horizon = max(rounds, 1)
+        pts = [self.at]
+        if self.every > 0:
+            nxt = self.at + self.every
+            while nxt < horizon:
+                pts.append(nxt)
+                nxt += self.every
+        self._steps = np.asarray([p for p in pts if p < horizon],
+                                 dtype=np.int64)
+
+    def serve_preempt_steps(self):
+        return self._steps
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeFaults:
+    """Realised serve-fault plan on the decode-step clock.
+
+    ``poisons`` is a tuple of (rid, decode-step) cells (absolute steps);
+    ``preempt_steps`` the driver-kill boundaries.  Plain data — the slot
+    server consumes it structurally, keeping ``repro.distributed`` free
+    of a ``repro.faults`` import."""
+
+    poisons: tuple = ()
+    preempt_steps: tuple = ()
+
+    @property
+    def empty(self) -> bool:
+        return not self.poisons and not self.preempt_steps
+
+
+def realise_serve_faults(spec, n_requests: int, horizon: int,
+                         seed: int = 0) -> ServeFaults:
+    """Lower a scenario spec (string or parsed ``Scenario``) to the
+    serve-fault channels, with the standard per-(seed, position)
+    realisation RNGs.  Transforms without serve channels contribute
+    nothing — a training-fault spec realises as an empty bundle."""
+    from ..scenarios.scenario import parse_scenario
+
+    scen = parse_scenario(spec) if isinstance(spec, str) else spec
+    poisons, preempts = set(), set()
+    for i, tr in enumerate(scen.transforms):
+        tr.prepare(int(n_requests), int(horizon),
+                   np.random.default_rng([seed, i]))
+        cells = tr.serve_poisons()
+        if cells is not None:
+            poisons.update((int(r), int(s)) for r, s in np.asarray(cells))
+        steps = tr.serve_preempt_steps()
+        if steps is not None:
+            preempts.update(int(s) for s in np.asarray(steps))
+    return ServeFaults(poisons=tuple(sorted(poisons)),
+                       preempt_steps=tuple(sorted(preempts)))
+
+
 FAULT_TRANSFORMS = {
     cls.name: cls
-    for cls in (NanGrad, CorruptReceipt, WorkerCrash, HostPreempt)
+    for cls in (NanGrad, CorruptReceipt, WorkerCrash, HostPreempt,
+                SlotPoison, ServePreempt)
 }
 
 # register into the shared grammar vocabulary (dict mutated in place, so

@@ -94,14 +94,20 @@ def tau_report(schedule: Schedule, policy: str, *, n_windows: int = 4,
                concurrency: int | None = None,
                scenario_spec: str = "",
                evictions: dict | None = None,
-               timeouts: dict | None = None) -> dict:
+               timeouts: dict | None = None,
+               shed: dict | None = None,
+               drained: dict | None = None,
+               attempts: dict | None = None) -> dict:
     """Full report dict: global stats + per-window stats, each with the
     matching Table-1 rate, plus the Koloskova sanity relations.
 
-    ``evictions`` / ``timeouts`` are the serving lane's degradation maps
-    (rid → decode step, from :class:`~repro.distributed.admission
-    .AdmissionTrace`): passed through under ``"degraded"`` so the rendered
-    report shows how many requests the pool quarantined or timed out."""
+    ``evictions`` / ``timeouts`` / ``shed`` / ``drained`` are the serving
+    lane's degradation maps (rid → decode step, from
+    :class:`~repro.distributed.admission.AdmissionTrace`) and ``attempts``
+    the retry ledger (rid → failed attempts consumed): passed through
+    under ``"degraded"`` so the rendered report accounts every request the
+    pool quarantined, timed out, shed, drained or retried — the
+    no-silent-loss audit trail the chaos suite checks."""
     c = constants or DEFAULT_CONSTANTS
     b = schedule.wait_b
     n = schedule.n_workers
@@ -132,6 +138,11 @@ def tau_report(schedule: Schedule, policy: str, *, n_windows: int = 4,
                           for k, v in (evictions or {}).items()},
             "timeouts": {int(k): int(v)
                          for k, v in (timeouts or {}).items()},
+            "shed": {int(k): int(v) for k, v in (shed or {}).items()},
+            "drained": {int(k): int(v)
+                        for k, v in (drained or {}).items()},
+            "attempts": {int(k): int(v)
+                         for k, v in (attempts or {}).items()},
         },
         "koloskova": {
             # τ_avg ≤ τ_C always (Koloskova et al. 22, restated §3.1)
@@ -163,9 +174,17 @@ def render_report(report: dict) -> str:
                      f"{w.tau_c:>6d} {w.rate:>12.4g}")
     deg = report.get("degraded") or {}
     ev, to = deg.get("evictions") or {}, deg.get("timeouts") or {}
-    if ev or to:
-        lines.append(f"degraded: {len(ev)} evicted "
-                     f"(quarantine) · {len(to)} timed out")
+    sh, dr = deg.get("shed") or {}, deg.get("drained") or {}
+    at = deg.get("attempts") or {}
+    if ev or to or sh or dr or at:
+        line = (f"degraded: {len(ev)} evicted "
+                f"(quarantine) · {len(to)} timed out")
+        if sh or dr:
+            line += f" · {len(sh)} shed · {len(dr)} drained"
+        if at:
+            line += (f" · {len(at)} retried "
+                     f"({sum(at.values())} failed attempts)")
+        lines.append(line)
     k = report["koloskova"]
     checks = [f"tau_avg<=tau_c: {'ok' if k['tau_avg_le_tau_c'] else 'VIOLATED'}"]
     if k["tau_c_le_concurrency"] is not None:

@@ -78,6 +78,23 @@ class WorldTransform:
         None."""
         return None
 
+    # ---- serving channels (repro.faults.transforms) ------------------------
+    # For serve-lane transforms ``prepare(n, rounds, rng)`` receives
+    # n = n_requests and rounds = the decode-step horizon: the serving
+    # clock is decode steps, not server rounds.
+    def serve_poisons(self) -> np.ndarray | None:
+        """(m, 2) int (rid, decode-step) cells whose decode logits the
+        slot server poisons to NaN (driving the quarantine path), or None
+        when the transform injects no serve faults."""
+        return None
+
+    def serve_preempt_steps(self) -> np.ndarray | None:
+        """(k,) decode-step boundaries at which the SERVE driver process
+        is scheduled to be preempted (host-level metadata; the chaos
+        harness kills/raises there and exercises snapshot resume), or
+        None."""
+        return None
+
 
 class Identity(WorldTransform):
     """Explicit no-op — a wrapped world with only Identity transforms must

@@ -142,8 +142,11 @@ def test_obs_kind_reports_payload_shape_change_with_file_name():
     fails = check_perf.check_obs({"bench": "obs"}, _obs_payload(),
                                  tolerance=0.05,
                                  paths=("cur_obs.json", "base_obs.json"))
-    assert len(fails) == 1
+    # the missing ratio no longer short-circuits: the flag rows (also
+    # failing on an empty payload) are reported alongside it
+    assert len(fails) == 4
     assert "overhead_ratio" in fails[0] and "cur_obs.json" in fails[0]
+    assert any("trace_valid" in f for f in fails[1:])
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +175,44 @@ def test_faults_kind_missing_ratio_is_clean_failure_not_keyerror():
     fails = check_perf.check_faults({"bench": "faults"}, {},
                                     tolerance=0.1,
                                     paths=("cur_faults.json", "b.json"))
-    assert len(fails) == 1 and "cur_faults.json" in fails[0]
+    # every failing row of the file is reported, not just the first
+    assert len(fails) == 4 and "cur_faults.json" in fails[0]
+    assert any("unguarded_poisoned" in f for f in fails[1:])
+
+
+# ---------------------------------------------------------------------------
+# resilience kind (absolute ceiling + accounting flags)
+# ---------------------------------------------------------------------------
+
+def _resilience_payload(ratio=1.02, identical=True, accounted=True):
+    return {"bench": "resilience", "retry_overhead_ratio": ratio,
+            "clean_token_identical": identical, "all_accounted": accounted}
+
+
+def test_resilience_kind_passes_and_ceiling_is_absolute():
+    base = _resilience_payload(ratio=1.5)    # baseline never relaxes it
+    assert check_perf.check_resilience(_resilience_payload(ratio=0.95),
+                                       base, tolerance=0.1) == []
+    fails = check_perf.check_resilience(_resilience_payload(ratio=0.85),
+                                        base, tolerance=0.1)
+    assert len(fails) == 1 and "retry_overhead_ratio" in fails[0]
+
+
+def test_resilience_kind_gates_accounting_flags():
+    base = _resilience_payload()
+    for kw, name in ((dict(identical=False), "clean_token_identical"),
+                     (dict(accounted=False), "all_accounted")):
+        fails = check_perf.check_resilience(_resilience_payload(**kw),
+                                            base, tolerance=0.1)
+        assert len(fails) == 1 and name in fails[0]
+
+
+def test_resilience_kind_missing_ratio_reports_all_rows():
+    fails = check_perf.check_resilience({"bench": "resilience"},
+                                        _resilience_payload(),
+                                        tolerance=0.1,
+                                        paths=("cur_r.json", "b.json"))
+    assert len(fails) == 3 and "cur_r.json" in fails[0]
 
 
 # ---------------------------------------------------------------------------

@@ -165,13 +165,22 @@ def test_divergence_breaker_unit():
     br = DivergenceBreaker(window=3, factor=2.0)
     for i, l in enumerate([1.0, 1.0, 1.0]):       # best window = 1.0
         assert not br.observe(i, l)
-    assert not br.observe(3, float("nan"))        # non-finite: ignored
-    assert not br.observe(4, float("inf"))
-    assert not br.tripped
     # sliding window [1, 1, 10]: mean 4 > 2 × best(=1) → trips right away
     assert br.observe(5, 10.0)
     assert br.tripped and br.tripped_round == 5
     assert br.observe(8, 1.0)                     # latched
+
+
+def test_divergence_breaker_trips_on_nonfinite_loss():
+    """Regression: NaN compares false against factor×best, so a NaN-only
+    divergence used to never trip the breaker — non-finite losses must
+    trip immediately, even before a full window has been observed."""
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        br = DivergenceBreaker(window=8, factor=10.0)
+        assert not br.observe(0, 1.0)
+        assert br.observe(1, bad), f"breaker ignored loss={bad}"
+        assert br.tripped and br.tripped_round == 1
+        assert br.observe(2, 1.0)                 # latched
 
 
 # ---------------------------------------------------------------------------

@@ -74,7 +74,8 @@ def test_registry_names_match_classes():
     assert set(TRANSFORMS) == {"identity", "drift", "straggler", "elastic",
                                "data_drift", "sparsify", "nan_grad",
                                "corrupt_receipt", "worker_crash",
-                               "host_preempt"}
+                               "host_preempt", "slot_poison",
+                               "serve_preempt"}
     for name, cls in TRANSFORMS.items():
         assert cls.name == name
 
